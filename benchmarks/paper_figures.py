@@ -1,0 +1,173 @@
+"""Paper Figures 2-4.
+
+Fig 2/3: test error vs compression factor {1, 1/2, 1/4, ... 1/64} on
+MNIST + ROT analogues, 3-layer (Fig 2) and 5-layer (Fig 3) nets.
+Fig 4: fixed storage, inflated virtual width — expansion factors
+{1, 2, 4, 8, 16} with K^l frozen at the 50-hidden-unit dense budget;
+the paper's claim: HashNet keeps improving to 8-16x while RER/LRD
+saturate or degrade.
+
+ASCII plots + JSON rows (no matplotlib offline).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.data import mnist_synthetic as D
+from repro.paper import mlp, train as T
+
+SWEEP_METHODS = ("hashed", "nn", "rer", "lrd")
+
+
+def run_compression_sweep(*, datasets=("mnist", "rot"), depths=(3, 5),
+                          hidden=500, n_train=2500, n_test=2000,
+                          epochs=12, seed=0,
+                          compressions=(1.0, 0.5, 0.25, 0.125, 1 / 16,
+                                        1 / 32, 1 / 64)) -> List[Dict]:
+    cfg = T.TrainConfig(epochs=epochs)
+    rows = []
+    for ds in datasets:
+        x, y = D.load(ds, "train", n=n_train, seed=seed)
+        xt, yt = D.load(ds, "test", n=n_test, seed=seed + 1)
+        for depth in depths:
+            dims = (784,) + (hidden,) * (depth - 2) + (D.num_classes(ds),)
+            for c in compressions:
+                for m in SWEEP_METHODS:
+                    if c == 1.0 and m != "nn":
+                        continue       # compression 1: all coincide w/ NN
+                    r = T.run_method(m, dims, c, x, y, xt, yt, cfg,
+                                     seed=seed)
+                    r.update({"dataset": ds, "depth": depth})
+                    rows.append(r)
+                    print(f"  {ds} {depth}L c=1/{round(1/c):<3d} {m:7s} "
+                          f"err {r['test_err']*100:6.2f}%", flush=True)
+    return rows
+
+
+def run_expansion_sweep(*, dataset="rot", depths=(3, 5), base_hidden=50,
+                        n_train=2500, n_test=2000, epochs=12, seed=0,
+                        factors=(1, 2, 4, 8, 16)) -> List[Dict]:
+    cfg = T.TrainConfig(epochs=epochs)
+    x, y = D.load(dataset, "train", n=n_train, seed=seed)
+    xt, yt = D.load(dataset, "test", n=n_test, seed=seed + 1)
+    rows = []
+    for depth in depths:
+        base_dims = (784,) + (base_hidden,) * (depth - 2) + (10,)
+        base_spec = mlp.MLPSpec(base_dims, method="dense", dropout=0.3,
+                                input_dropout=0.1, seed=seed)
+        bparams, _ = T.fit(base_spec, x, y, cfg=cfg, seed=seed)
+        base_err = T.evaluate(base_spec, bparams, xt, yt)
+        rows.append({"method": "dense-base", "factor": 1, "depth": depth,
+                     "dataset": dataset, "test_err": base_err,
+                     "free_params": base_spec.free_params()})
+        print(f"  {depth}L dense-50u baseline err {base_err*100:.2f}%",
+              flush=True)
+        # budget per layer l of the BASE dense net
+        for f in factors:
+            hidden = base_hidden * f
+            dims = (784,) + (hidden,) * (depth - 2) + (10,)
+            for m in ("hashed", "rer", "lrd"):
+                # per-layer budget = base dense layer size
+                spec_kw = dict(dropout=0.3, input_dropout=0.1, seed=seed)
+                # compression chosen so layer budget matches the base net:
+                # K^l = base_in*base_out  => c = K^l / (in*out)
+                # use layer-0 ratio (uniform here by construction)
+                c = ((base_dims[0] * base_dims[1])
+                     / (dims[0] * dims[1]))
+                spec = mlp.MLPSpec(dims, method=m, compression=c, **spec_kw)
+                params, _ = T.fit(spec, x, y, cfg=cfg, seed=seed)
+                err = T.evaluate(spec, params, xt, yt)
+                rows.append({"method": m, "factor": f, "depth": depth,
+                             "dataset": dataset, "test_err": err,
+                             "free_params": spec.free_params()})
+                print(f"  {depth}L x{f:<2d} {m:7s} err {err*100:6.2f}% "
+                      f"({spec.free_params():,} params)", flush=True)
+    return rows
+
+
+def ascii_plot(rows: List[Dict], xkey: str, series_key: str = "method",
+               width: int = 56, invert_x: bool = False) -> str:
+    xs = sorted({r[xkey] for r in rows}, reverse=invert_x)
+    out = []
+    for m in sorted({r[series_key] for r in rows}):
+        pts = {r[xkey]: r["test_err"] for r in rows if r[series_key] == m}
+        line = f"{m:11s}|"
+        errs = [pts.get(xx) for xx in xs]
+        for e in errs:
+            line += "  ----" if e is None else f" {e*100:5.1f}"
+        out.append(line)
+    hdr = f"{'':11s}|" + "".join(
+        f" {('1/'+str(round(1/xx)) if xkey=='compression' else 'x'+str(xx)):>5s}"
+        for xx in xs)
+    return hdr + "\n" + "\n".join(out)
+
+
+def assert_figure_claims(sweep: List[Dict], expand: List[Dict]) -> List[str]:
+    msgs = []
+    # F1: at the smallest compression, HashNet has the lowest error
+    cmin = min(r["compression"] for r in sweep)
+    small = [r for r in sweep if r["compression"] == cmin]
+
+    def mean_err(rows, m):
+        v = [r["test_err"] for r in rows if r["method"] == m]
+        return float(np.mean(v)) if v else float("nan")
+
+    h = mean_err(small, "hashed")
+    others = {m: mean_err(small, m) for m in ("nn", "rer", "lrd")}
+    ok = all(h < v for v in others.values())
+    msgs.append(f"F1 {'PASS' if ok else 'FAIL'}: at c=1/{round(1/cmin)} "
+                f"HashNet {h*100:.1f}% vs " +
+                " ".join(f"{m}:{v*100:.1f}%" for m, v in others.items()))
+    # F2: expansion helps HashNet (some factor > 1 beats factor 1)
+    he = {r["factor"]: r["test_err"] for r in expand
+          if r["method"] == "hashed" and r["depth"] == 3}
+    best_f = min(he, key=he.get)
+    ok2 = best_f > 1
+    msgs.append(f"F2 {'PASS' if ok2 else 'FAIL'}: HashNet expansion sweet "
+                f"spot x{best_f} (errs: " +
+                " ".join(f"x{f}:{e*100:.1f}%" for f, e in sorted(he.items()))
+                + ")")
+    return msgs
+
+
+def main(quick=False, out_json=None):
+    kw_s, kw_e = {}, {}
+    if quick:
+        kw_s = dict(datasets=("mnist",), depths=(3,), hidden=200,
+                    n_train=1500, n_test=1000, epochs=8,
+                    compressions=(1.0, 0.25, 1 / 16, 1 / 64))
+        kw_e = dict(depths=(3,), n_train=1500, n_test=1000, epochs=8,
+                    factors=(1, 4, 8))
+    print("== Figures 2/3 (error vs compression) ==", flush=True)
+    sweep = run_compression_sweep(**kw_s)
+    for ds in sorted({r["dataset"] for r in sweep}):
+        for depth in sorted({r["depth"] for r in sweep}):
+            sel = [r for r in sweep if r["dataset"] == ds
+                   and r["depth"] == depth]
+            if sel:
+                print(f"\n[{ds} {depth}-layer] err% vs compression:")
+                print(ascii_plot(sel, "compression", invert_x=True))
+    print("\n== Figure 4 (fixed storage, inflated width) ==", flush=True)
+    expand = run_expansion_sweep(**kw_e)
+    for depth in sorted({r["depth"] for r in expand}):
+        sel = [r for r in expand if r["depth"] == depth
+               and r["method"] != "dense-base"]
+        print(f"\n[{depth}-layer] err% vs expansion factor:")
+        print(ascii_plot(sel, "factor"))
+    print()
+    msgs = assert_figure_claims(sweep, expand)
+    for m in msgs:
+        print(m)
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump({"sweep": sweep, "expansion": expand,
+                       "claims": msgs}, f, indent=1)
+    return sweep, expand, msgs
+
+
+if __name__ == "__main__":
+    main()

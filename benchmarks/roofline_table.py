@@ -1,0 +1,64 @@
+"""Render the roofline table from runs/dryrun/*.json (dry-run outputs).
+
+    python -m benchmarks.roofline_table [--dir runs/dryrun] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(directory: str) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt(rows: List[Dict], md: bool = False) -> str:
+    cols = ["arch", "shape", "mesh", "hashed", "compute_s", "memory_s",
+            "collective_s", "dominant", "useful", "roofline"]
+    out = []
+    sep = " | " if md else "  "
+    hdr = sep.join([f"{c:>12s}" if i > 3 else f"{c:<22s}" if i == 0
+                    else f"{c:<12s}" for i, c in enumerate(cols)])
+    out.append(hdr)
+    if md:
+        out.append(sep.join(["---"] * len(cols)))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"],
+                                         r.get("multi_pod", False))):
+        mesh = "2x16x16" if r.get("multi_pod") else "16x16"
+        vals = [
+            f"{r['arch']:<22s}", f"{r['shape']:<12s}", f"{mesh:<12s}",
+            f"{str(r.get('hashed', False)):<6s}",
+            f"{r['compute_s']*1e3:11.1f}ms", f"{r['memory_s']*1e3:11.1f}ms",
+            f"{r['collective_s']*1e3:11.1f}ms",
+            f"{r['dominant']:>12s}",
+            f"{r['useful_flops_ratio']:12.2f}",
+            f"{r['roofline_fraction']:12.3f}",
+        ]
+        out.append(sep.join(vals))
+    return "\n".join(out)
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--dir", default="runs/dryrun")
+    p.add_argument("--md", action="store_true")
+    args = p.parse_args()
+    rows = load(args.dir)
+    if not rows:
+        print(f"no dry-run JSON in {args.dir} — run "
+              "`python -m repro.launch.dryrun --all --both-meshes "
+              f"--out {args.dir}` first")
+        return 1
+    print(fmt(rows, args.md))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

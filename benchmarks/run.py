@@ -1,0 +1,68 @@
+"""Benchmark orchestrator — one benchmark per paper table/figure plus the
+kernel micro-bench and the dry-run roofline table.
+
+    python -m benchmarks.run                 # default (moderate) sizes
+    python -m benchmarks.run --quick         # CI profile (~5 min)
+    python -m benchmarks.run --full          # paper-scale sizes (hours)
+    python -m benchmarks.run --only tables   # tables|figures|kernels|roofline
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--only", default=None,
+                   choices=[None, "tables", "figures", "kernels",
+                            "roofline"])
+    p.add_argument("--out", default="runs/bench")
+    args = p.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+
+    def want(name):
+        return args.only in (None, name)
+
+    if want("kernels"):
+        from benchmarks import kernel_bench
+        print("\n################ KERNELS "
+              "(hashed decompress-GEMM) ################")
+        kernel_bench.main(quick=args.quick,
+                          out_json=os.path.join(args.out, "kernels.json"))
+
+    if want("tables"):
+        from benchmarks import paper_tables
+        print("\n################ PAPER TABLES 1 & 2 ################")
+        paper_tables.main(quick=args.quick, full=args.full,
+                          out_json=os.path.join(args.out, "tables.json"))
+
+    if want("figures"):
+        from benchmarks import paper_figures
+        print("\n################ PAPER FIGURES 2-4 ################")
+        paper_figures.main(quick=args.quick,
+                           out_json=os.path.join(args.out, "figures.json"))
+
+    if want("roofline"):
+        from benchmarks import roofline_table
+        print("\n################ ROOFLINE (from dry-run) ################")
+        for d in ("runs/dryrun_final", "runs/dryrun"):
+            rows = roofline_table.load(d)
+            if rows:
+                print(f"[{d}]")
+                print(roofline_table.fmt(rows))
+                break
+        else:
+            print("(no dry-run artifacts found; run repro.launch.dryrun "
+                  "--all --both-meshes --out runs/dryrun_final)")
+
+    print(f"\ntotal bench wall time: {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,42 @@
+"""Reproduce the paper's core comparison on one dataset (fast slice of
+benchmarks/run.py, which sweeps all eight datasets and both depths).
+
+HashNet vs {Equivalent-NN, Random-Edge-Removal, Low-Rank, Dark-Knowledge}
+at compression 1/8 and 1/64 on the BASIC analogue — the paper's Table 1/2
+columns.  Expected ordering (paper §6): at 1/64 HashNet >> everything;
+at 1/8 HashNet ~ NN > RER > LRD.
+
+    PYTHONPATH=src python examples/paper_mnist.py [--epochs 20] [--n 4000]
+"""
+import argparse
+
+from repro.data import mnist_synthetic as D
+from repro.paper import mlp, train as T
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--epochs", type=int, default=15)
+parser.add_argument("--n", type=int, default=3000)
+parser.add_argument("--dataset", default="basic", choices=D.DATASETS)
+args = parser.parse_args()
+
+x, y = D.load(args.dataset, "train", n=args.n, seed=0)
+xt, yt = D.load(args.dataset, "test", n=2000, seed=1)
+cfg = T.TrainConfig(epochs=args.epochs, distill_temp=2.0, distill_alpha=0.7)
+dims = (784, 500, 10)          # paper uses 1000 hidden units; 500 here
+
+# compression-1 teacher for the DK variants
+tspec = mlp.MLPSpec(dims, method="dense", dropout=0.3, input_dropout=0.1)
+tparams, _ = T.fit(tspec, x, y, cfg=cfg)
+teacher_err = T.evaluate(tspec, tparams, xt, yt)
+print(f"teacher (compression 1): {teacher_err*100:.2f}%\n")
+
+print(f"{'method':12s} {'1/8':>8s} {'1/64':>8s}")
+for method in ("hashed", "hashed_dk", "nn", "dk", "rer", "lrd"):
+    errs = []
+    for c in (1 / 8, 1 / 64):
+        r = T.run_method(method, dims, c, x, y, xt, yt, cfg,
+                         teacher=(tspec, tparams))
+        errs.append(r["test_err"])
+    print(f"{method:12s} {errs[0]*100:7.2f}% {errs[1]*100:7.2f}%")
+print("\npaper claim to check: the hashed rows degrade far less from "
+      "1/8 -> 1/64 than every baseline.")

@@ -1,0 +1,47 @@
+"""Quickstart: the paper's technique in two minutes.
+
+1. HashedNets MLP (paper-faithful): an 8x-compressed net matches the
+   equivalent-size dense baseline on a synthetic MNIST analogue.
+2. The same technique as a first-class config flag on a modern LLM
+   architecture (qwen3 family, reduced size): param count drops ~8x,
+   one train step runs, loss is finite.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro.configs.reduced import reduced
+from repro.data import mnist_synthetic as D
+from repro.models import build
+from repro.paper import mlp, train as ptrain
+
+print("=== 1. HashedNets MLP (Chen et al. 2015) ===")
+x, y = D.load("basic", "train", n=2000, seed=0)
+xt, yt = D.load("basic", "test", n=1000, seed=1)
+cfg = ptrain.TrainConfig(epochs=10)
+dims = (784, 300, 10)
+
+full = ptrain.run_method("nn", dims, 1.0, x, y, xt, yt, cfg)
+print(f"dense   1/1 : err {full['test_err']*100:5.2f}%  "
+      f"params {full['free_params']:,}")
+for method in ("hashed", "nn", "rer", "lrd"):
+    r = ptrain.run_method(method, dims, 1 / 8, x, y, xt, yt, cfg)
+    print(f"{method:7s} 1/8 : err {r['test_err']*100:5.2f}%  "
+          f"params {r['free_params']:,}")
+
+print("\n=== 2. Hashed LLM (same technique, modern arch) ===")
+dense_cfg = reduced(C.get("qwen3-1.7b"))
+hashed_cfg = dense_cfg.hashed_variant(compression=1 / 8)
+for cfg_i in (dense_cfg, hashed_cfg):
+    m = build(cfg_i)
+    params = m.init(jax.random.PRNGKey(0))
+    n = sum(p.size for p in jax.tree.leaves(params))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                             cfg_i.vocab_size)
+    loss, _ = jax.jit(m.train_loss)(params, {"tokens": tok, "targets": tok})
+    print(f"{cfg_i.name:28s} params {n:10,}  loss {float(loss):.3f}")
+print("\nhashed variant stores ~8x fewer projection parameters; "
+      "same architecture, same code path.")

@@ -1,0 +1,31 @@
+"""Assigned architecture configs (public-literature exact settings) +
+the paper's own MLP configs.  Importing this package registers everything.
+"""
+from repro.configs.base import ArchConfig, get, names, register  # noqa: F401
+from repro.configs import (  # noqa: F401
+    llama3_405b,
+    gemma3_4b,
+    qwen3_1_7b,
+    gemma_7b,
+    granite_moe_1b,
+    llama4_scout,
+    whisper_medium,
+    zamba2_2_7b,
+    rwkv6_7b,
+    llava_next_mistral_7b,
+    hashmlp,
+)
+from repro.configs.reduced import reduced  # noqa: F401
+
+ASSIGNED = [
+    "llama3-405b",
+    "gemma3-4b",
+    "qwen3-1.7b",
+    "gemma-7b",
+    "granite-moe-1b-a400m",
+    "llama4-scout-17b-a16e",
+    "whisper-medium",
+    "zamba2-2.7b",
+    "rwkv6-7b",
+    "llava-next-mistral-7b",
+]

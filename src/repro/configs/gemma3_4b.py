@@ -1,0 +1,15 @@
+"""Gemma-3 4B [hf:google/gemma-3-4b-pt]: 34L, d=2560, 8H GQA kv=4,
+head_dim=256, d_ff=10240, vocab=262144, 5:1 local(1024):global attention,
+GeGLU, tied + scaled embeddings.  Sub-quadratic-eligible for long_500k
+(5/6 of layers are 1024-window)."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma3-4b", family="dense", arch_kind="decoder",
+    num_layers=34, d_model=2560, num_heads=8, num_kv_heads=4,
+    head_dim=256, d_ff=10240, vocab_size=262144,
+    rope_theta=1000000.0, activation="geglu",
+    sliding_window=1024, global_every=6,
+    tie_embeddings=True, scale_embeddings=True, qk_norm=True,
+    subquadratic=True,
+))

@@ -1,0 +1,11 @@
+"""Gemma 7B [arXiv:2403.08295]: 28L, d=3072, 16H kv=16 (MHA),
+head_dim=256, d_ff=24576, vocab=256000, GeGLU, tied + scaled embeddings."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="gemma-7b", family="dense", arch_kind="decoder",
+    num_layers=28, d_model=3072, num_heads=16, num_kv_heads=16,
+    head_dim=256, d_ff=24576, vocab_size=256000,
+    rope_theta=10000.0, activation="geglu",
+    tie_embeddings=True, scale_embeddings=True,
+))

@@ -1,0 +1,13 @@
+"""Granite-3.0 1B-A400M [hf:ibm-granite/granite-3.0-1b-a400m-base]:
+24L, d=1024, 16H GQA kv=8, MoE 32 experts top-8, expert d_ff=512,
+vocab=49155 (padded to 49408), tied embeddings."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="granite-moe-1b-a400m", family="moe", arch_kind="decoder",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=8,
+    head_dim=64, d_ff=512, vocab_size=49155,
+    rope_theta=10000.0, activation="swiglu",
+    moe=True, num_experts=32, top_k=8, moe_d_ff=512,
+    tie_embeddings=True,
+))

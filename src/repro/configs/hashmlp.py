@@ -1,0 +1,17 @@
+"""The paper's own experimental architectures: 3-layer (1 hidden) and
+5-layer (3 hidden) fully-connected nets with 1000 hidden units, ReLU,
+on 784-dim MNIST-variant inputs (Chen et al. 2015 §6)."""
+from repro.configs.base import ArchConfig, register
+
+# These are handled by repro.paper (dedicated MLP implementation); the
+# registry entries make them selectable via --arch for the launchers.
+MLP_3 = register(ArchConfig(
+    name="hashmlp-3layer", family="mlp", arch_kind="decoder",
+    num_layers=1, d_model=1000, num_heads=1, num_kv_heads=1, head_dim=64,
+    d_ff=1000, vocab_size=10, activation="relu",
+))
+MLP_5 = register(ArchConfig(
+    name="hashmlp-5layer", family="mlp", arch_kind="decoder",
+    num_layers=3, d_model=1000, num_heads=1, num_kv_heads=1, head_dim=64,
+    d_ff=1000, vocab_size=10, activation="relu",
+))

@@ -1,0 +1,10 @@
+"""Llama-3.1 405B [arXiv:2407.21783]: 126L, d=16384, 128H GQA kv=8,
+d_ff=53248, vocab=128256, RoPE theta 500k."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama3-405b", family="dense", arch_kind="decoder",
+    num_layers=126, d_model=16384, num_heads=128, num_kv_heads=8,
+    head_dim=128, d_ff=53248, vocab_size=128256,
+    rope_theta=500000.0, activation="swiglu",
+))

@@ -1,0 +1,13 @@
+"""Llama-4 Scout 17B-16E [hf:meta-llama/Llama-4-Scout-17B-16E]:
+48L, d=5120, 40H GQA kv=8, MoE 16 experts top-1, expert d_ff=8192,
+vocab=202048.  Text backbone only (early-fusion vision frontend is outside
+the assigned scope)."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llama4-scout-17b-a16e", family="moe", arch_kind="decoder",
+    num_layers=48, d_model=5120, num_heads=40, num_kv_heads=8,
+    head_dim=128, d_ff=8192, vocab_size=202048,
+    rope_theta=500000.0, activation="swiglu",
+    moe=True, num_experts=16, top_k=1, moe_d_ff=8192,
+))

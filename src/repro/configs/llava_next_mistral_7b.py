@@ -1,0 +1,13 @@
+"""LLaVA-NeXT (mistral-7b backbone) [hf:llava-hf/llava-v1.6-mistral-7b-hf]:
+32L, d=4096, 32H GQA kv=8, d_ff=14336, vocab=32000.  The anyres vision
+tower is a STUB per the assignment: input_specs() provides precomputed
+patch embeddings (up to 2880 tokens) prepended to the text sequence."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="llava-next-mistral-7b", family="vlm", arch_kind="decoder",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab_size=32000,
+    rope_theta=1000000.0, activation="swiglu",
+    num_image_tokens=2880,
+))

@@ -1,0 +1,11 @@
+"""RWKV-6 "Finch" 7B [arXiv:2404.05892]: 32L, d=4096, attention-free
+(data-dependent decay linear recurrence), d_ff=14336, vocab=65536,
+head_dim=64."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="rwkv6-7b", family="ssm", arch_kind="rwkv",
+    num_layers=32, d_model=4096, num_heads=64, num_kv_heads=64,
+    head_dim=64, d_ff=14336, vocab_size=65536,
+    norm="layernorm", subquadratic=True,
+))

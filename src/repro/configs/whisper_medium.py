@@ -1,0 +1,13 @@
+"""Whisper medium [arXiv:2212.04356]: enc-dec, 24+24L, d=1024, 16H MHA,
+d_ff=4096, vocab=51865, GELU, LayerNorm, sinusoidal positions.  The conv
+audio frontend is a STUB per the assignment: input_specs() provides
+precomputed 1500-frame embeddings (30 s of audio)."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="whisper-medium", family="audio", arch_kind="encdec",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+    head_dim=64, d_ff=4096, vocab_size=51865,
+    activation="gelu", norm="layernorm",
+    encoder_layers=24, encoder_seq=1500,
+))

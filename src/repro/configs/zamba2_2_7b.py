@@ -1,0 +1,15 @@
+"""Zamba2-2.7B [arXiv:2411.15242]: 54 Mamba-2 layers (d=2560, state=64)
+with ONE shared attention+MLP block invoked every 6 layers (9 points),
+32H MHA head_dim=80, shared d_ff=10240, vocab=32000.
+Simplifications vs HF: single shared block (Zamba2 alternates two) and
+no per-invocation LoRA on the shared block (DESIGN.md §5)."""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="zamba2-2.7b", family="hybrid", arch_kind="zamba",
+    num_layers=54, d_model=2560, num_heads=32, num_kv_heads=32,
+    head_dim=80, d_ff=10240, vocab_size=32000,
+    rope_theta=10000.0, activation="geglu",
+    ssm_state=64, ssm_head_dim=64, hybrid_group=6,
+    subquadratic=True,
+))

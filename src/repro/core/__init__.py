@@ -1,0 +1,13 @@
+"""HashedNets core: stateless hashed weight sharing (Chen et al., ICML 2015)."""
+from repro.core.hashed import HashedSpec, init, materialize, materialize_rows, matmul
+from repro.core import hashing, feature_hash
+
+__all__ = [
+    "HashedSpec",
+    "init",
+    "materialize",
+    "materialize_rows",
+    "matmul",
+    "hashing",
+    "feature_hash",
+]

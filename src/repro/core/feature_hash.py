@@ -1,0 +1,63 @@
+"""Feature-hashing view of HashedNets (paper §4.3, Eq. 5/6).
+
+For output unit i:   z_i = w^T phi_i(a),  with
+    [phi_i(a)]_k = sum_{j : h(i,j) = k} xi(i,j) a_j.
+
+This module exists to *prove* (in tests) the paper's equivalence between the
+weight-sharing view (Eq. 4) and the feature-hashing view (Eq. 5), and the
+unbiased inner-product property inherited from Weinberger et al. (2009).
+It is an oracle, not a production path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashed import HashedSpec, element_indices
+
+
+def phi(a, spec: HashedSpec, i: int):
+    """Hash the activation vector ``a`` (rows,) into bucket space for output
+    unit ``i``: returns (num_buckets,)."""
+    assert spec.mode == "element"
+    rows = spec.rows
+    ii = jnp.full((rows,), i, dtype=jnp.int32)
+    jj = jnp.full((rows,), i, dtype=jnp.int32)  # placeholder, replaced below
+    del jj
+    j = jnp.arange(rows, dtype=jnp.int32)
+    # NOTE: in the paper's layer convention z_i = sum_j V_ij a_j with
+    # V in R^{n_out x n_in}.  Our storage convention is x @ V with
+    # V in R^{rows=n_in, cols=n_out}; so output unit i indexes *columns* and
+    # the activation index j runs over *rows*:  V[j, i] pairs (j, i).
+    idx, sgn = element_indices(spec, j, ii)
+    contrib = a * sgn.astype(a.dtype)
+    return jax.ops.segment_sum(contrib, idx, num_segments=spec.num_buckets)
+
+
+def forward_feature_hash(a, w, spec: HashedSpec):
+    """z = [w^T phi_i(a)]_i for all output units — Eq. (5) evaluated naively.
+
+    O(n_out * n_in); test-only oracle.
+    """
+    assert spec.mode == "element"
+
+    def one(i):
+        return jnp.dot(w, phi(a, spec, i))
+
+    return jax.vmap(one)(jnp.arange(spec.cols, dtype=jnp.int32))
+
+
+def matmul_via_feature_hashing(x, w, spec: HashedSpec):
+    """Batched Eq. 5: x (B, rows) -> z (B, cols) via the feature-hash view."""
+    return jax.vmap(lambda a: forward_feature_hash(a, w, spec))(x)
+
+
+def index_map(d: int, k: int, seed: int):
+    """1-D hashing-trick map for a d-dim vector into k buckets:
+    returns (idx (d,), sgn (d,)) — used by the Eq. 1 unbiasedness test and
+    the gradient sketch."""
+    from repro.core import hashing
+    i = jnp.arange(d, dtype=jnp.int32)
+    z = jnp.zeros_like(i)
+    return (hashing.bucket_hash(i, z, k, seed),
+            hashing.sign_hash(i, z, seed).astype(jnp.float32))

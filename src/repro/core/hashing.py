@@ -1,0 +1,86 @@
+"""Stateless integer hashing for HashedNets (Chen et al., ICML 2015).
+
+The paper uses xxHash to map a connection key (i, j) to a bucket in
+{0..K-1} plus an independent sign hash xi(i,j) in {-1,+1}.  xxHash is not
+available offline; the paper only requires an *approximately uniform* hash,
+so we use the murmur3 finalizer (a well-studied avalanche mixer) over a
+uint32 key derived from (i, j, seed).  Everything here is pure jnp and runs
+identically inside Pallas kernel bodies (uint32 arithmetic only).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+# murmur3 / splitmix constants
+_M1 = np.uint32(0x85EBCA6B)
+_M2 = np.uint32(0xC2B2AE35)
+_GOLDEN = np.uint32(0x9E3779B9)
+
+
+def mix32(x):
+    """murmur3 finalizer: avalanche a uint32."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 13)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_key(i, j, seed: int):
+    """Combine (i, j, seed) -> well-mixed uint32.
+
+    i, j may be scalars or broadcastable integer arrays (e.g. iota tiles
+    inside a kernel).  Two mixing rounds decorrelate rows/columns.
+    """
+    i = jnp.asarray(i, jnp.uint32)
+    j = jnp.asarray(j, jnp.uint32)
+    s = np.uint32(seed & 0xFFFFFFFF)
+    h = mix32(i * _GOLDEN + s)
+    h = mix32(h ^ (j * _M1 + np.uint32(0x165667B1)))
+    return h
+
+
+def bucket_hash(i, j, num_buckets: int, seed: int):
+    """h(i,j) in {0..num_buckets-1} (paper Eq. 3)."""
+    return (hash_key(i, j, seed) % np.uint32(num_buckets)).astype(jnp.int32)
+
+
+def sign_hash(i, j, seed: int):
+    """xi(i,j) in {-1,+1} (paper Eq. 7), independent of bucket_hash.
+
+    Uses a different derived seed so h and xi are decorrelated.
+    """
+    h = hash_key(i, j, seed ^ 0x5BF03635)
+    # top bit -> {-1, +1}
+    return (1 - 2 * (h >> 31).astype(jnp.int32)).astype(jnp.int32)
+
+
+def bucket_and_sign(i, j, num_buckets: int, seed: int):
+    return bucket_hash(i, j, num_buckets, seed), sign_hash(i, j, seed)
+
+
+def _mix32_py(x: int) -> int:
+    """Pure-Python murmur3 finalizer — safe to call inside jit traces
+    (static seeds must never touch jnp, or they become tracers)."""
+    x &= 0xFFFFFFFF
+    x ^= x >> 16
+    x = (x * 0x85EBCA6B) & 0xFFFFFFFF
+    x ^= x >> 13
+    x = (x * 0xC2B2AE35) & 0xFFFFFFFF
+    x ^= x >> 16
+    return x
+
+
+def derive_seed(base_seed: int, *path: int) -> int:
+    """Derive a per-layer / per-matrix seed from a base seed and a path of
+    integers (layer index, matrix slot, ...), mirroring the paper's use of
+    dedicated hash functions h^l per layer.  Pure Python on purpose."""
+    h = base_seed & 0xFFFFFFFF
+    for p in path:
+        key = (h ^ ((p & 0xFFFFFFFF) * int(_GOLDEN))) & 0xFFFFFFFF
+        h = _mix32_py(key)
+    return h

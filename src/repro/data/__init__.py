@@ -1,0 +1,1 @@
+from repro.data import mnist_synthetic, lm_stream, pipeline  # noqa: F401

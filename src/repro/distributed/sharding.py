@@ -1,0 +1,111 @@
+"""Logical-axis sharding: rules mapping logical names -> physical mesh axes.
+
+Model code annotates params/activations with *logical* PartitionSpecs
+(names from repro.nn.layers: "batch", "fsdp", "tp", "expert", "seq").  The
+launcher activates a rule set for a concrete mesh; `resolve` / `constraint`
+translate logical specs to physical ones.  Outside an active context (unit
+tests on one device) constraints are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+# default rule sets -------------------------------------------------------
+SINGLE_POD_RULES: Dict[str, Axis] = {
+    "batch": ("data",),
+    "cache_batch": ("data",),
+    "fsdp": "data",
+    "tp": "model",
+    "expert": "model",
+    "seq": "data",
+    "tp_kv": "model",   # launch/specs.rules_for flips tp_kv/tp_hd
+    "tp_hd": None,      # by kv-head divisibility per arch
+}
+
+MULTI_POD_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "cache_batch": ("pod", "data"),
+    "fsdp": "data",
+    "tp": "model",
+    "expert": "model",
+    "seq": "data",
+    "tp_kv": "model",
+    "tp_hd": None,
+}
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[Dict[str, Axis]] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[Dict[str, Axis]] = None):
+    """Activate (mesh, rules) for logical-spec resolution."""
+    if rules is None:
+        rules = (MULTI_POD_RULES if "pod" in mesh.axis_names
+                 else SINGLE_POD_RULES)
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh, _CTX.rules = mesh, dict(rules)
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def resolve_spec(spec: P, rules: Optional[Dict[str, Axis]] = None) -> P:
+    """Translate a logical PartitionSpec into a physical one."""
+    rules = rules if rules is not None else (_CTX.rules or {})
+
+    def res(axis):
+        if axis is None:
+            return None
+        if isinstance(axis, (tuple, list)):
+            out = []
+            for a in axis:
+                r = res(a)
+                if r is None:
+                    continue
+                out.extend(r if isinstance(r, (tuple, list)) else [r])
+            return tuple(out) or None
+        return rules.get(axis, None)
+
+    return P(*[res(a) for a in spec])
+
+
+def resolve_tree(spec_tree, mesh: Optional[Mesh] = None,
+                 rules: Optional[Dict[str, Axis]] = None):
+    """Logical spec pytree -> NamedSharding pytree for `mesh`."""
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        raise RuntimeError("no active mesh; wrap in sharding.use_mesh(...)")
+    rules = rules if rules is not None else _CTX.rules
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, resolve_spec(s, rules)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def constraint(x, spec: P):
+    """with_sharding_constraint with logical names; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    phys = resolve_spec(spec)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, phys))

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the hashed decompress-GEMM kernels.
+
+Each function materializes the virtual matrix explicitly and uses plain
+jnp dots — the ground truth every Pallas kernel is swept against.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import hashed
+
+
+def hashed_matmul_ref(x, w, spec: hashed.HashedSpec, dtype=None):
+    """y = x @ V,  V = decompress(w, spec)."""
+    dtype = dtype or x.dtype
+    v = hashed.materialize(w, spec, dtype=jnp.float32)
+    y = jnp.dot(x.astype(jnp.float32), v)
+    return y.astype(dtype)
+
+
+def hashed_matmul_t_ref(g, w, spec: hashed.HashedSpec, dtype=None):
+    """dx = g @ V^T (the input-gradient product)."""
+    dtype = dtype or g.dtype
+    v = hashed.materialize(w, spec, dtype=jnp.float32)
+    y = jnp.dot(g.astype(jnp.float32), v.T)
+    return y.astype(dtype)
+
+
+def hashed_dw_ref(x, g, spec: hashed.HashedSpec, dtype=jnp.float32):
+    """dw given upstream grad g of y = x @ V — paper Eq. 12.
+
+    element: dw[k] = sum_{(i,j): h(i,j)=k} xi(i,j) * (x^T g)[i, j]
+    block:   dbank[b] = sum_{(ti,tj): h=b} sigma(ti,tj) * (x^T g)[tile ti,tj]
+    """
+    gv = jnp.einsum(
+        "...r,...c->rc",
+        x.reshape(-1, x.shape[-1]).astype(jnp.float32),
+        g.reshape(-1, g.shape[-1]).astype(jnp.float32),
+    )
+    if spec.mode == "element":
+        i = jnp.arange(spec.rows, dtype=jnp.int32)[:, None]
+        j = jnp.arange(spec.cols, dtype=jnp.int32)[None, :]
+        idx, sgn = hashed.element_indices(spec, i, j)
+        contrib = (gv * sgn.astype(jnp.float32)).ravel()
+        out = jnp.zeros((spec.num_buckets,), jnp.float32).at[idx.ravel()].add(contrib)
+        return out.astype(dtype)
+    bm, bn = spec.block_shape
+    gi, gj = spec.tile_grid
+    idx, sgn = hashed.block_indices(spec)
+    tiles = gv.reshape(gi, bm, gj, bn).transpose(0, 2, 1, 3)  # (gi,gj,bm,bn)
+    tiles = tiles * sgn[..., None, None].astype(jnp.float32)
+    out = jnp.zeros((spec.bank_tiles, bm, bn), jnp.float32)
+    out = out.at[idx.reshape(-1)].add(tiles.reshape(-1, bm, bn))
+    return out.astype(dtype)

@@ -1,0 +1,129 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the exact production step (train_step with
+optimizer state / prefill / decode_step), resolves logical shardings onto
+the requested mesh, then::
+
+    lowered  = jax.jit(fn, in_shardings=..., out_shardings=...).lower(*abstract)
+    compiled = lowered.compile()
+    print(compiled.memory_analysis())   # proves the footprint
+    print(compiled.cost_analysis())     # FLOPs/bytes for the roofline
+
+and records memory/cost/collective analysis as JSON for EXPERIMENTS.md.
+Failures here (sharding mismatch, OOM at compile, unsupported collective)
+are bugs in the framework — the CI gate for "would run at scale".
+
+Usage::
+
+    python -m repro.launch.dryrun --arch llama3-405b --shape train_4k
+    python -m repro.launch.dryrun --all --multi-pod --out runs/dryrun
+    python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k --hashed
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede every other import: jax locks device count on first init.
+os.environ["REPRO_FAITHFUL_DOTS"] = "1"   # compile-only: keep bf16 dots
+
+import argparse  # noqa: E402
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline, specs
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
+             hashed: bool = False, num_microbatches: int = 1,
+             rules=None, verbose: bool = True):
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    bundle = specs.make_step(arch, shape, mesh, hashed=hashed,
+                             num_microbatches=num_microbatches, rules=rules)
+    t0 = time.time()
+    jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                     out_shardings=bundle.out_shardings)
+    lowered = jitted.lower(*bundle.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = roofline.memory_analysis_dict(compiled)
+    result = roofline.analyze(compiled, bundle.cfg, bundle.cell, chips)
+    result.update({
+        "multi_pod": multi_pod, "hashed": hashed,
+        "mesh": {"axes": list(mesh.axis_names),
+                 "shape": [int(s) for s in mesh.devices.shape]},
+        "memory": mem,
+        "lower_s": t_lower, "compile_s": t_compile,
+        "num_microbatches": num_microbatches,
+    })
+    if verbose:
+        print(compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        print({k: ca[k] for k in sorted(ca)
+               if k in ("flops", "bytes accessed")} if ca else ca)
+        print(roofline.report(result))
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+    return result
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None,
+                   choices=list(specs.SHAPES) + [None])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--both-meshes", action="store_true")
+    p.add_argument("--hashed", action="store_true")
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--out", default=None, help="JSON output directory")
+    args = p.parse_args()
+
+    if args.all:
+        todo = [(a, s) for a, s, skip in specs.cells()]
+    else:
+        assert args.arch and args.shape, "--arch + --shape, or --all"
+        todo = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = (f"{arch}|{shape}|{'multi' if mp else 'single'}"
+                   f"{'|hashed' if args.hashed else ''}")
+            print(f"=== {tag} ===", flush=True)
+            try:
+                result = run_cell(arch, shape, multi_pod=mp,
+                                  hashed=args.hashed,
+                                  num_microbatches=args.microbatches)
+            except Exception as e:  # noqa: BLE001 - report-and-continue CLI
+                traceback.print_exc()
+                failures.append((tag, repr(e)))
+                continue
+            if args.out:
+                os.makedirs(args.out, exist_ok=True)
+                fname = tag.replace("|", "_").replace(".", "_") + ".json"
+                with open(os.path.join(args.out, fname), "w") as f:
+                    json.dump(result, f, indent=1)
+    # skips are part of the record
+    for arch, shape, skip in specs.cells(include_skipped=True):
+        if skip:
+            print(f"SKIP {arch}|{shape}: {skip}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err}")
+        return 1
+    print(f"\nall {len(todo) * len(meshes)} cells compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,389 @@
+"""Hierarchical cost analysis over optimized (SPMD-partitioned) HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+but every model here scans over layers (and q-chunks, and microbatches), so
+XLA's flat numbers understate FLOPs/bytes/collectives by the trip count
+(verified empirically: scan-of-8-matmuls reports 1/8 the flops of the
+unrolled version).  We therefore parse the optimized HLO ourselves:
+
+1. split the module into computations, each a list of instructions with a
+   local name -> shape map;
+2. derive each ``while`` loop's trip count from its condition computation
+   (counted loops from lax.scan compare the induction variable against a
+   constant: trip = that constant);
+3. propagate call multipliers from ENTRY through calls/bodies
+   (``fusion``/``call`` keep the parent multiplier; ``while`` bodies
+   multiply by trip count; fusion bodies contribute FLOPs but no HBM bytes
+   — they are single kernels);
+4. count per instruction:
+   - FLOPs: ``dot`` = 2 * out_elems * contracted_elems (batch dims fall out
+     of out_elems); elementwise/reduce flops are negligible at LLM scale
+     and ignored (documented under-count < 2%);
+   - HBM bytes: operand bytes + output bytes for every materializing
+     instruction (post-fusion HLO = one kernel per instruction, so this is
+     the fusion-aware traffic proxy);
+   - collective wire bytes: ring-scaled per kind (see roofline.py).
+
+The result also keeps the top-k heaviest dots/collectives/memory ops with
+shapes — the profile the perf loop (EXPERIMENTS.md §Perf) reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# shape group is lazy-greedy: tuple shapes may contain layout braces and
+# /*index=N*/ comments; the opcode is the first bare `word(` after it.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\(")
+# greedy .*: computation params may be tuple types with nested parens
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{$")
+_CALL_ATTR_RE = re.compile(r"(calls|body|condition|to_apply)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# ops that never materialize a new buffer / are control-only
+_NO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "while", "call", "conditional", "after-all",
+             "custom-call", "partition-id", "replica-id", "iota"}
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * b
+    return total
+
+
+def shape_dims(shape_str: str) -> List[int]:
+    """Dims of the FIRST array shape in the string."""
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        if not stripped or stripped.startswith("//"):
+            continue
+        if cur is None:
+            m = _COMP_HDR_RE.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(1), [], {})
+                if stripped.startswith("ENTRY"):
+                    entry = m.group(1)
+                continue
+        else:
+            if stripped == "}" or stripped.startswith("}"):
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, shape, opcode = m.groups()
+            args = line.split(opcode + "(", 1)
+            operands: List[str] = []
+            if len(args) > 1:
+                depth = 0
+                buf = ""
+                for ch in args[1]:
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        if depth == 0:
+                            break
+                        depth -= 1
+                    buf += ch
+                operands = [a.strip().lstrip("%") for a in buf.split(",")
+                            if a.strip()]
+            cur.instrs.append(Instr(name, shape, opcode, operands, line))
+            cur.shapes[name] = shape
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Counted-loop trip count: the constant in the condition's compare.
+    lax.scan loops run [0, N) step 1; the compare constant is N."""
+    consts = []
+    for ins in cond.instrs:
+        m = _CONST_RE.search(ins.line)
+        if m:
+            consts.append(int(m.group(1)))
+    return max(consts) if consts else 1
+
+
+def _callees(ins: Instr) -> List[Tuple[str, str]]:
+    return [(kind, name) for kind, name in _CALL_ATTR_RE.findall(ins.line)]
+
+
+def call_multipliers(comps: Dict[str, Computation], entry: str
+                     ) -> Dict[str, Tuple[float, float]]:
+    """name -> (flops_mult, bytes_mult) accumulated over all call sites."""
+    mult: Dict[str, Tuple[float, float]] = {entry: (1.0, 1.0)}
+    order = [entry]
+    seen = {entry}
+    # BFS; the call graph is a DAG in HLO
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        fm, bm = mult[cname]
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            for kind, callee in _callees(ins):
+                if callee not in comps:
+                    continue
+                if kind == "body":
+                    cond_name = dict(_callees(ins)).get("condition")
+                    trips = _trip_count(comps[cond_name]) \
+                        if cond_name and cond_name in comps else 1
+                    dfm, dbm = fm * trips, bm * trips
+                elif kind == "condition":
+                    trips = _trip_count(comps[callee])
+                    dfm, dbm = fm * trips, bm * trips
+                elif kind == "calls":   # fusion: flops yes, bytes no
+                    dfm, dbm = fm, 0.0
+                elif kind == "to_apply":
+                    if ins.opcode == "call":
+                        # XLA CPU wraps loop bodies: call(...), to_apply=%wide...
+                        dfm, dbm = fm, bm
+                    else:   # reduce/scatter/sort combiner: negligible
+                        continue
+                else:
+                    dfm, dbm = fm, bm
+                pf, pb = mult.get(callee, (0.0, 0.0))
+                mult[callee] = (pf + dfm, pb + dbm)
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+    return mult
+
+
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = 1
+    for d in shape_dims(ins.shape):
+        out_elems *= d
+    lhs_shape = comp.shapes.get(ins.operands[0], "") if ins.operands else ""
+    lhs_dims = shape_dims(lhs_shape)
+    m = _CONTRACT_RE.search(ins.line)
+    contracted = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx:
+                contracted *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * contracted
+
+
+def _sliced_operand_bytes(comp: Computation, param_idx: int,
+                          full_bytes: int) -> int:
+    """Bytes actually read from a fusion operand: if every use of the
+    parameter inside the fused computation is a dynamic-slice / gather /
+    slice, only the slice outputs move from HBM — not the full operand.
+    (Without this, scan-over-stacked-layer-params charges the FULL stacked
+    parameter array once per layer: a 126x overcount at llama3 scale.)"""
+    pname = None
+    for ins in comp.instrs:
+        if ins.opcode == "parameter" and f"parameter({param_idx})" in ins.line:
+            pname = ins.name
+            break
+    if pname is None:
+        return full_bytes
+    sliced = 0
+    for ins in comp.instrs:
+        if pname not in ins.operands:
+            continue
+        if ins.opcode in ("dynamic-slice", "gather", "slice"):
+            # reads only the slice it produces
+            if ins.operands and ins.operands[0] == pname:
+                sliced += shape_bytes(ins.shape)
+            else:       # param used as an index operand: negligible
+                sliced += 0
+        elif ins.opcode == "dynamic-update-slice":
+            if ins.operands and ins.operands[0] == pname:
+                # in-place update: writes the update region only
+                upd = ins.operands[1] if len(ins.operands) > 1 else ""
+                sliced += shape_bytes(comp.shapes.get(upd, ""))
+            else:
+                sliced += 0
+        elif ins.opcode in ("bitcast", "tuple", "get-tuple-element"):
+            sliced += 0   # aliasing only
+        else:
+            return full_bytes   # some use touches the whole operand
+    return min(sliced, full_bytes)
+
+
+def _root_effective_out_bytes(comp: Computation, full_bytes: int) -> int:
+    """Effective bytes WRITTEN by a fusion: a root dynamic-update-slice
+    writes only its update region (the buffer is updated in place)."""
+    root = comp.instrs[-1] if comp.instrs else None
+    if root is None:
+        return full_bytes
+    if root.opcode == "dynamic-update-slice" and len(root.operands) > 1:
+        upd_bytes = shape_bytes(comp.shapes.get(root.operands[1], ""))
+        return min(upd_bytes, full_bytes)
+    return full_bytes
+
+
+def instr_hbm_bytes(ins: Instr, comp: Computation,
+                    comps: Dict[str, Computation]) -> float:
+    """HBM traffic of one (post-fusion) instruction."""
+    base = ins.opcode
+    out_b = shape_bytes(ins.shape)
+    if base == "fusion":
+        called = None
+        for kind, cal in _CALL_ATTR_RE.findall(ins.line):
+            if kind == "calls":
+                called = comps.get(cal)
+        in_b = 0
+        for idx, op in enumerate(ins.operands):
+            fb = shape_bytes(comp.shapes.get(op, ""))
+            if called is not None:
+                fb = _sliced_operand_bytes(called, idx, fb)
+            in_b += fb
+        if called is not None:
+            out_b = _root_effective_out_bytes(called, out_b)
+        return float(in_b + out_b)
+    if base in ("dynamic-slice", "slice"):
+        return float(2 * out_b)
+    if base == "gather":
+        idx_b = shape_bytes(comp.shapes.get(ins.operands[1], "")) \
+            if len(ins.operands) > 1 else 0
+        return float(2 * out_b + idx_b)
+    if base == "dynamic-update-slice":
+        upd = shape_bytes(comp.shapes.get(ins.operands[1], "")) \
+            if len(ins.operands) > 1 else 0
+        return float(2 * upd)
+    if base == "scatter":
+        upd = shape_bytes(comp.shapes.get(ins.operands[-1], "")) \
+            if ins.operands else 0
+        return float(3 * upd + out_b * 0)   # read+modify+write updates
+    in_b = sum(shape_bytes(comp.shapes.get(op, "")) for op in ins.operands)
+    return float(in_b + out_b)
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(1, len([t for t in m.group(1).split(",") if t.strip()]))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return max(1, int(m.group(2)))
+    return 2
+
+
+def _collective_wire(ins: Instr, comp: Computation) -> float:
+    in_bytes = sum(shape_bytes(comp.shapes.get(op, op))
+                   for op in ins.operands)
+    out_bytes = shape_bytes(ins.shape)
+    g = _group_size(ins.line)
+    ring = (g - 1) / g
+    base = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+    if base == "all-gather":
+        return ring * out_bytes
+    if base == "all-reduce":
+        return 2 * ring * in_bytes
+    if base == "reduce-scatter":
+        return ring * in_bytes
+    if base == "all-to-all":
+        return ring * in_bytes
+    return float(in_bytes)  # collective-permute
+
+
+def analyze_text(text: str, top_k: int = 12) -> Dict[str, Any]:
+    comps, entry = parse_module(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    mult = call_multipliers(comps, entry)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    wire = 0.0
+    wire_by_kind: Dict[str, float] = {}
+    n_coll = 0
+    top_dots: List[Tuple[float, str]] = []
+    top_colls: List[Tuple[float, str]] = []
+    top_mem: List[Tuple[float, str]] = []
+
+    for cname, comp in comps.items():
+        fm, bm = mult.get(cname, (0.0, 0.0))
+        if fm == 0.0 and bm == 0.0:
+            continue
+        for ins in comp.instrs:
+            base = ins.opcode[:-6] if ins.opcode.endswith("-start") \
+                else ins.opcode
+            if base in ("dot", "convolution") and fm > 0:
+                f = _dot_flops(ins, comp) * fm
+                flops += f
+                top_dots.append((f, f"{fm:g}x {ins.line.strip()[:160]}"))
+            if base in COLLECTIVES and fm > 0:
+                w = _collective_wire(ins, comp) * fm
+                wire += w
+                wire_by_kind[base] = wire_by_kind.get(base, 0.0) + w
+                n_coll += int(fm)
+                top_colls.append((w, f"{fm:g}x {ins.line.strip()[:160]}"))
+            if bm > 0 and base not in _NO_BYTES \
+                    and not base.endswith("-done"):
+                b = instr_hbm_bytes(ins, comp, comps) * bm
+                hbm_bytes += b
+                top_mem.append((b, f"{bm:g}x {ins.opcode} "
+                                   f"{ins.shape[:80]}"))
+
+    def top(lst):
+        return [f"{v:.3e}  {s}" for v, s in
+                sorted(lst, key=lambda t: -t[0])[:top_k]]
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "wire_bytes": wire,
+        "wire_by_kind": wire_by_kind,
+        "n_collectives": n_coll,
+        "top_dots": top(top_dots),
+        "top_collectives": top(top_colls),
+        "top_memory_ops": top(top_mem),
+    }

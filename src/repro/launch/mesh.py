@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Function (not module constant) on purpose: importing this module must not
+touch jax device state — the dry-run sets XLA_FLAGS before first jax init,
+smoke tests see one device.
+
+Single pod  : (data=16, model=16)              = 256 chips (v5e pod)
+Multi-pod   : (pod=2, data=16, model=16)       = 512 chips
+The "pod" axis is the slow-ICI/DCN dimension: pure data parallelism,
+gradient all-reduce only (optionally compressed, train/grad_compress.py).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Arbitrary mesh for elastic-rescale restarts (e.g. (8,16) after
+    losing half a pod): checkpoints restore onto any mesh (train/checkpoint
+    elastic-remesh path)."""
+    return jax.make_mesh(shape, axes)
+
+
+def single_device_mesh():
+    """1-chip mesh with the standard axis names (CI / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware model for the roofline (assignment constants)
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~per axis direction)
+HBM_BYTES = 16 * 2 ** 30      # 16 GiB per chip

@@ -1,0 +1,238 @@
+"""Roofline terms from a compiled dry-run artifact (no real hardware).
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = wire_bytes_per_device / ICI_BW
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (XLA's per-partition
+estimate — the module is already SPMD-partitioned, so these are per-device
+numbers).  Collective bytes are NOT in cost_analysis: we parse the
+optimized HLO text and sum operand bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, scaled by the standard
+ring factors:
+
+    all-gather      (g-1)/g * out_bytes     (bytes received per device)
+    reduce-scatter  (g-1)/g * in_bytes      (bytes sent per device)
+    all-reduce      2 (g-1)/g * in_bytes    (RS + AG)
+    all-to-all      (g-1)/g * in_bytes
+    collective-permute  in_bytes
+
+where g = replica-group size parsed per op.  MODEL_FLOPS (6ND train /
+2ND-per-token decode) gives the useful-compute ratio.
+"""
+from __future__ import annotations
+
+import json
+import math
+import re
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.launch import mesh as M
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^=]*?\))|"
+                     r"(?:[\w]+\[[\d,]*\](?:\{[^}]*\})?))\s+([\w\-]+)\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    gm = _GROUPS_RE.search(line)
+    if gm:
+        first = gm.group(1).split("}", 1)[0].lstrip("{")
+        ids = [t for t in first.split(",") if t.strip() != ""]
+        return max(1, len(ids))
+    gi = _GROUPS_IOTA_RE.search(line)
+    if gi:
+        return max(1, int(gi.group(2)))
+    return 2
+
+
+def parse_collectives(hlo_text: str) -> List[Dict[str, Any]]:
+    """Every collective in optimized HLO: kind, in/out bytes, group size.
+
+    Optimized HLO prints operands by *name only*, so we first build a
+    name -> result-shape map from all definitions, then resolve each
+    collective's operand names against it.
+    """
+    shapes: Dict[str, str] = {}
+    coll_lines: List[str] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape_str, opcode = m.groups()
+        shapes[name] = shape_str
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base in _COLLECTIVES:
+            coll_lines.append(line)
+
+    out = []
+    for line in coll_lines:
+        m = _DEF_RE.match(line)
+        name, out_shape, opcode = m.groups()
+        kind = opcode[:-6] if opcode.endswith("-start") else opcode
+        # operand names inside the first paren group
+        args_str = line.split(opcode + "(", 1)[1].split(")", 1)[0]
+        in_bytes = 0
+        for arg in args_str.split(","):
+            arg = arg.strip().lstrip("%")
+            if arg in shapes:
+                in_bytes += _shape_bytes(shapes[arg])
+            else:
+                in_bytes += _shape_bytes(arg)  # literal shape (rare)
+        out.append({"kind": kind, "in_bytes": in_bytes,
+                    "out_bytes": _shape_bytes(out_shape),
+                    "group": _group_size(line)})
+    return out
+
+
+def collective_wire_bytes(ops: List[Dict[str, Any]]) -> Dict[str, float]:
+    """Per-device wire bytes by kind, ring-scaled."""
+    per_kind: Dict[str, float] = {}
+    for op in ops:
+        g = max(op["group"], 1)
+        ring = (g - 1) / g
+        if op["kind"] == "all-gather":
+            b = ring * op["out_bytes"]
+        elif op["kind"] == "all-reduce":
+            b = 2 * ring * op["in_bytes"]
+        elif op["kind"] == "reduce-scatter":
+            b = ring * op["in_bytes"]
+        elif op["kind"] == "all-to-all":
+            b = ring * op["in_bytes"]
+        else:  # collective-permute
+            b = op["in_bytes"]
+        per_kind[op["kind"]] = per_kind.get(op["kind"], 0.0) + b
+    return per_kind
+
+
+def model_flops(cfg, cell, chips: int) -> float:
+    """Useful FLOPs per step per device: 6 N D (train), 2 N B (decode),
+    2 N B S (prefill); MoE uses active params."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        total = 6.0 * n * cell.batch * cell.seq
+    elif cell.kind == "prefill":
+        total = 2.0 * n * cell.batch * cell.seq
+    else:
+        total = 2.0 * n * cell.batch            # one token per sequence
+    return total / chips
+
+
+def analyze(compiled, cfg, cell, chips: int,
+            hlo_text: Optional[str] = None) -> Dict[str, Any]:
+    """Roofline terms from the compiled artifact.
+
+    Primary numbers come from the hierarchical HLO walk (hlo_analysis),
+    which scales while-loop bodies by trip count; XLA's flat
+    cost_analysis() is kept as a cross-check (it counts loop bodies once).
+    """
+    from repro.launch import hlo_analysis
+
+    ca = compiled.cost_analysis() or {}
+    hlo_text = hlo_text if hlo_text is not None else compiled.as_text()
+    h = hlo_analysis.analyze_text(hlo_text)
+    flops = h["flops"]
+    bytes_acc = h["hbm_bytes"]
+    wire_total = h["wire_bytes"]
+
+    compute_s = flops / M.PEAK_FLOPS_BF16
+    memory_s = bytes_acc / M.HBM_BW
+    collective_s = wire_total / M.ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, cell, chips)
+    bound = max(terms.values())
+    result = {
+        "arch": cfg.name, "shape": cell.name, "chips": chips,
+        "hlo_flops_per_dev": flops,
+        "hlo_bytes_per_dev": bytes_acc,
+        "collective_bytes_per_dev": wire_total,
+        "collective_by_kind": h["wire_by_kind"],
+        "n_collectives": h["n_collectives"],
+        "xla_flops_flat": float(ca.get("flops", 0.0)),
+        "xla_bytes_flat": float(ca.get("bytes accessed", 0.0)),
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": (mf / flops) if flops else 0.0,
+        "roofline_fraction": (mf / M.PEAK_FLOPS_BF16) / bound
+        if bound > 0 else 0.0,
+        "step_time_bound_s": bound,
+        "top_dots": h["top_dots"],
+        "top_collectives": h["top_collectives"],
+        "top_memory_ops": h["top_memory_ops"],
+    }
+    return result
+
+
+def memory_analysis_dict(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    out = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "temp_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    if out:
+        # arguments are aliased into outputs for donated state; peak live =
+        # args + temps (upper bound; XLA CPU reports totals across devices)
+        out["total_bytes"] = (out.get("argument_size_in_bytes", 0)
+                              + out.get("temp_size_in_bytes", 0)
+                              + out.get("output_size_in_bytes", 0)
+                              - out.get("alias_size_in_bytes", 0))
+    return out
+
+
+def fmt_seconds(s: float) -> str:
+    if s < 1e-3:
+        return f"{s*1e6:.1f}us"
+    if s < 1.0:
+        return f"{s*1e3:.2f}ms"
+    return f"{s:.2f}s"
+
+
+def report(result: Dict[str, Any]) -> str:
+    lines = [
+        f"[{result['arch']} x {result['shape']}] chips={result['chips']}",
+        f"  HLO flops/dev      {result['hlo_flops_per_dev']:.3e}"
+        f"   (useful ratio {result['useful_flops_ratio']:.2f})",
+        f"  HLO bytes/dev      {result['hlo_bytes_per_dev']:.3e}",
+        f"  wire bytes/dev     {result['collective_bytes_per_dev']:.3e}"
+        f"   ({result['n_collectives']} collectives)",
+        f"  compute term       {fmt_seconds(result['compute_s'])}",
+        f"  memory term        {fmt_seconds(result['memory_s'])}",
+        f"  collective term    {fmt_seconds(result['collective_s'])}",
+        f"  dominant           {result['dominant']}"
+        f"   roofline fraction {result['roofline_fraction']:.3f}",
+    ]
+    return "\n".join(lines)

@@ -1,0 +1,266 @@
+"""(architecture x input-shape) cell definitions + abstract input specs.
+
+Every assigned arch is paired with four shapes (train_4k / prefill_32k /
+decode_32k / long_500k).  ``long_500k`` requires sub-quadratic attention
+and is skipped (with the reason recorded) for pure full-attention archs —
+DESIGN.md §5.  ``input_specs`` returns ShapeDtypeStruct stand-ins only:
+weak-type-correct, shardable, zero device allocation.
+
+``make_step`` assembles the exact jittable callable the production job
+runs (train_step with optimizer / prefill / decode_step) together with its
+abstract inputs and logical->physical resolved shardings for a given mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import repro.configs as C
+from repro.configs.base import ArchConfig
+from repro.distributed import sharding as shd
+from repro.models import build
+from repro.nn import layers as L
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str        # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524288, 1),
+}
+
+
+def skip_reason(cfg: ArchConfig, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return ("pure full-attention arch: 500k-token KV decode assigned "
+                "only to SSM/hybrid/local-attention archs (DESIGN.md §5)")
+    return None
+
+
+def cells(include_skipped: bool = False):
+    """[(arch_name, shape_name, skip_reason|None)] — 40 nominal cells."""
+    out = []
+    for arch in C.ASSIGNED:
+        cfg = C.get(arch)
+        for shape_name in SHAPES:
+            reason = skip_reason(cfg, shape_name)
+            if reason is None or include_skipped:
+                out.append((arch, shape_name, reason))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _model_dtype(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def cache_len(cfg: ArchConfig, cell: ShapeCell) -> int:
+    return cell.seq + cfg.num_image_tokens
+
+
+def train_batch_struct(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    b, s = cell.batch, cell.seq
+    batch = {"tokens": _sds((b, s), jnp.int32),
+             "targets": _sds((b, s), jnp.int32)}
+    if cfg.arch_kind == "encdec":
+        batch["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model),
+                               _model_dtype(cfg))
+    if cfg.num_image_tokens:
+        batch["image_embeds"] = _sds((b, cfg.num_image_tokens, cfg.d_model),
+                                     _model_dtype(cfg))
+    return batch
+
+
+def train_batch_pspecs(cfg: ArchConfig, cell: ShapeCell) -> Dict[str, Any]:
+    batch = {"tokens": P(L.BATCH, None), "targets": P(L.BATCH, None)}
+    if cfg.arch_kind == "encdec":
+        batch["frames"] = P(L.BATCH, None, None)
+    if cfg.num_image_tokens:
+        batch["image_embeds"] = P(L.BATCH, None, None)
+    return batch
+
+
+def input_specs(arch: str, shape_name: str, hashed: bool = False):
+    """Abstract inputs for the cell's step fn (the dry-run entry point)."""
+    cfg = C.get(arch)
+    if hashed:
+        cfg = cfg.hashed_variant()
+    cell = SHAPES[shape_name]
+    model = build(cfg)
+    if cell.kind == "train":
+        return train_batch_struct(cfg, cell)
+    mlen = cache_len(cfg, cell)
+    cache = jax.eval_shape(lambda: model.init_cache(cell.batch, mlen))
+    if cell.kind == "prefill":
+        batch = train_batch_struct(cfg, cell)
+        del batch["targets"]
+        batch["cache"] = cache
+        return batch
+    # decode: one new token against a full cache
+    return {"tokens": _sds((cell.batch, 1), jnp.int32), "cache": cache}
+
+
+# ---------------------------------------------------------------------------
+# rules per cell (long-context cells use sequence/context parallelism)
+# ---------------------------------------------------------------------------
+
+def rules_for(mesh: Mesh, cell: ShapeCell,
+              cfg: Optional[ArchConfig] = None) -> Dict[str, Any]:
+    multi = "pod" in mesh.axis_names
+    rules = dict(shd.MULTI_POD_RULES if multi else shd.SINGLE_POD_RULES)
+    if cell.kind == "decode":
+        # flash-decoding style: KV cache seq dim sharded over the model
+        # axis (batch already covers data).  Attention reductions over the
+        # sharded T decompose into tiny partial-softmax all-reduces —
+        # measured 126x cheaper than all-gathering the cache (§Perf it.1).
+        # (Tried for prefill too and REFUTED: the 32k-token cache WRITE
+        # then thrashes reshardings, +84% collective — prefill keeps the
+        # kv-head/head-dim TP sharding.)
+        rules["seq"] = "model"
+    else:
+        rules["seq"] = None
+    if cell.kind == "decode" and cell.batch > 1:
+        # weights-stationary decode: replicate the (tiny) single-token
+        # activations over data instead of all-gathering FSDP weight
+        # shards per layer — partial dots reduce over data with MB-scale
+        # all-reduces while weights and the KV cache stay fully sharded
+        # (cache keeps its own batch axis).  §Perf it.5.
+        rules["batch"] = None
+    if cell.batch == 1:
+        # context parallelism: batch unshardable; KV/seq over everything
+        rules["batch"] = None
+        rules["cache_batch"] = None
+        rules["seq"] = (("pod", "data", "model") if multi
+                        else ("data", "model"))
+    seq_uses_model = rules.get("seq") is not None and \
+        "model" in (rules["seq"] if isinstance(rules["seq"], tuple)
+                    else (rules["seq"],))
+    if seq_uses_model:
+        # the model axis is spent on the cache seq dim — heads/head_dim
+        # must not claim it too (one mesh axis per PartitionSpec)
+        rules["tp_kv"], rules["tp_hd"] = None, None
+    elif cfg is not None:
+        # KV-cache TP axis by divisibility: heads if possible, else
+        # head_dim (GQA archs have fewer kv heads than the 16-way axis).
+        tp = mesh.shape["model"]
+        kvh = cfg.num_kv_heads if cfg.arch_kind != "rwkv" \
+            else cfg.d_model // cfg.head_dim
+        if kvh % tp == 0:
+            rules["tp_kv"], rules["tp_hd"] = "model", None
+        elif cfg.head_dim % tp == 0:
+            rules["tp_kv"], rules["tp_hd"] = None, "model"
+        else:
+            rules["tp_kv"], rules["tp_hd"] = None, None
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# step assembly
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepBundle:
+    fn: Callable                 # jittable
+    args: Tuple[Any, ...]        # abstract args (ShapeDtypeStructs)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    cfg: ArchConfig
+    cell: ShapeCell
+    meta: Dict[str, Any]
+
+
+def make_step(arch: str, shape_name: str, mesh: Mesh, *,
+              hashed: bool = False,
+              num_microbatches: int = 1,
+              rules: Optional[Dict[str, Any]] = None,
+              optimizer_name: str = "adamw") -> StepBundle:
+    cfg = C.get(arch)
+    if hashed:
+        cfg = cfg.hashed_variant()
+    cell = SHAPES[shape_name]
+    model = build(cfg)
+    rules = rules or rules_for(mesh, cell, cfg)
+
+    def resolve(spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(mesh, shd.resolve_spec(s, rules)),
+            spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+    meta = {"arch": cfg.name, "shape": shape_name, "kind": cell.kind,
+            "seq": cell.seq, "batch": cell.batch, "hashed": hashed}
+
+    if cell.kind == "train":
+        optimizer = opt_lib.make(optimizer_name)
+        train_step = step_lib.make_train_step(
+            model, optimizer, num_microbatches=num_microbatches)
+        state = jax.eval_shape(
+            lambda: step_lib.init_state(model, optimizer,
+                                        jax.random.PRNGKey(0)))
+        state_specs = step_lib.state_pspecs(model, optimizer)
+        batch = train_batch_struct(cfg, cell)
+        batch_specs = train_batch_pspecs(cfg, cell)
+        in_sh = (resolve(state_specs), resolve(batch_specs))
+        out_sh = (resolve(state_specs), None)
+
+        def fn(state, batch):
+            with shd.use_mesh(mesh, rules):
+                return train_step(state, batch)
+
+        return StepBundle(fn, (state, batch), in_sh, out_sh, cfg, cell, meta)
+
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspecs = model.pspecs()
+    mlen = cache_len(cfg, cell)
+    cache = jax.eval_shape(lambda: model.init_cache(cell.batch, mlen))
+    cache_specs = model.cache_pspecs(cell.batch, mlen)
+
+    if cell.kind == "prefill":
+        batch = train_batch_struct(cfg, cell)
+        del batch["targets"]
+        batch["cache"] = cache
+        batch_specs = train_batch_pspecs(cfg, cell)
+        del batch_specs["targets"]
+        batch_specs["cache"] = cache_specs
+        in_sh = (resolve(pspecs), resolve(batch_specs))
+        out_sh = (None, resolve(cache_specs))
+
+        def fn(params, batch):
+            with shd.use_mesh(mesh, rules):
+                return model.prefill(params, batch)
+
+        return StepBundle(fn, (params, batch), in_sh, out_sh, cfg, cell,
+                          meta)
+
+    # decode
+    tokens = _sds((cell.batch, 1), jnp.int32)
+    tok_spec = P(L.BATCH, None)
+    in_sh = (resolve(pspecs), resolve(tok_spec), resolve(cache_specs))
+    out_sh = (None, resolve(cache_specs))
+
+    def fn(params, tokens, cache):
+        with shd.use_mesh(mesh, rules):
+            return model.decode_step(params, tokens, cache)
+
+    return StepBundle(fn, (params, tokens, cache), in_sh, out_sh, cfg, cell,
+                      meta)

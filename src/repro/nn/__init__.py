@@ -1,0 +1,2 @@
+"""NN substrate: hashed-capable layers and blocks."""
+from repro.nn import layers, attention, ffn, moe, mamba2, rwkv6  # noqa: F401

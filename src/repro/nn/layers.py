@@ -1,0 +1,259 @@
+"""Base layers: linear (dense or hashed), norms, embeddings, rotary, acts.
+
+Convention: every ``*_init`` returns ``(params, pspecs)`` — two parallel
+pytrees, the second holding ``jax.sharding.PartitionSpec`` leaves with
+*logical* axis names (resolved against the physical mesh by
+``repro.distributed.sharding``).  All ``*_apply`` are pure functions.
+
+The paper's technique enters here: ``LinearPlan.hashed`` swaps the dense
+weight for a HashedNets bank; everything downstream (attention, FFN, MoE,
+SSM projections, embeddings) goes through these two entry points, which is
+what makes hashing a first-class, arch-wide feature.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hashed as H
+
+# ---------------------------------------------------------------------------
+# logical axis names (resolved in repro.distributed.sharding)
+# ---------------------------------------------------------------------------
+BATCH = "batch"      # -> (pod, data)
+FSDP = "fsdp"        # -> data
+TP = "tp"            # -> model
+EXPERT = "expert"    # -> model
+SEQ = "seq"          # -> data (context parallelism)
+# KV-cache tensor-parallel axes: exactly ONE of these resolves to "model",
+# chosen per-arch by divisibility (kv_heads % tp == 0 ? tp_kv : tp_hd) —
+# GQA archs with 8 kv heads cannot shard heads over a 16-way axis, but can
+# shard head_dim (launch/specs.rules_for decides).
+TP_KV = "tp_kv"      # kv-heads dim of the cache
+TP_HD = "tp_hd"      # head_dim dim of the cache
+# cache batch dim: stays data-sharded even when decode ACTIVATIONS are
+# replicated over data (weights-stationary decode, launch/specs.rules_for)
+CACHE_BATCH = "cache_batch"
+NONE = None
+
+
+def default_dtype():
+    return jnp.bfloat16
+
+
+def accum_einsum(eq: str, a, b):
+    """einsum with f32 accumulation, CPU-runtime-safe.
+
+    XLA CPU (this version) cannot EXECUTE batched bf16xbf16->f32 dots
+    (DotThunk UNIMPLEMENTED), so tests/examples cast inputs to f32.  The
+    dry-run wants the TPU-faithful bf16 HLO (roofline reads its dtypes):
+    it compiles but never executes, and sets REPRO_FAITHFUL_DOTS=1.
+    """
+    import os
+    if (jax.default_backend() == "cpu"
+            and os.environ.get("REPRO_FAITHFUL_DOTS") != "1"
+            and a.dtype == jnp.bfloat16):
+        return jnp.einsum(eq, a.astype(jnp.float32), b.astype(jnp.float32))
+    return jnp.einsum(eq, a, b, preferred_element_type=jnp.float32)
+
+
+
+def bank_pspec(spec) -> P:
+    """Sharding for a hashed bank: over BOTH mesh axes when the leading
+    dim divides the full 256-shard grid, else replicated (small banks,
+    paper-scale MLPs).  A bank replicated over model made per-device
+    hashed state 2x the DENSE state at 405B scale (EXPERIMENTS.md §Perf);
+    decompression all-gathers the (c-times smaller) bank — the FSDP wire
+    win of the technique."""
+    n0 = spec.real_param_shape()[0]
+    sharded = n0 % 256 == 0
+    if spec.mode == "element":
+        return P((FSDP, TP)) if sharded else P(None)
+    return P((FSDP, TP), None, None) if sharded else P(None, None, None)
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LinearPlan:
+    in_dim: int
+    out_dim: int
+    hashed: Optional[H.HashedSpec] = None
+    pspec: Tuple[Any, Any] = (FSDP, TP)   # logical axes of the dense weight
+    dtype: Any = jnp.bfloat16
+    hash_path: str = "auto"               # materialize | scan | pallas | auto
+    scale: Optional[float] = None         # init stddev; default 1/sqrt(in)
+
+
+def linear_init(plan: LinearPlan, key):
+    scale = plan.scale if plan.scale is not None else 1.0 / math.sqrt(plan.in_dim)
+    if plan.hashed is not None:
+        spec = plan.hashed
+        assert spec.virtual_shape == (plan.in_dim, plan.out_dim), (
+            spec.virtual_shape, (plan.in_dim, plan.out_dim))
+        w = H.init(key, spec, scale=scale, dtype=plan.dtype)
+        return {"w": w}, {"w": bank_pspec(spec)}
+    w = (jax.random.normal(key, (plan.in_dim, plan.out_dim), jnp.float32)
+         * scale).astype(plan.dtype)
+    return {"w": w}, {"w": P(*plan.pspec)}
+
+
+def linear_apply(plan: LinearPlan, params, x):
+    w = params["w"]
+    if plan.hashed is not None:
+        return H.matmul(x, w, plan.hashed, path=plan.hash_path,
+                        dtype=x.dtype, vspec=P(*plan.pspec))
+    # native-dtype output (bf16): the MXU accumulates f32 internally
+    # regardless; emitting f32 + astype(bf16) would make every backward
+    # dot carry f32 activation-sized cotangents.  (On the CPU dry-run
+    # artifact this measured ~flat — XLA CPU upcasts bf16 dots to f32
+    # anyway — but it is the TPU-correct form; EXPERIMENTS.md §Perf A2.)
+    return jax.lax.dot_general(
+        x, w.astype(x.dtype), (((x.ndim - 1,), (0,)), ((), ())))
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((dim,), dtype)}, {"scale": P(None)}
+
+
+def rmsnorm_apply(params, x, eps: float = 1e-6):
+    """RMSNorm with (1 + scale) parameterization (gemma/llama-compatible
+    when scale is init at 0)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    return (xf * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return ({"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)},
+            {"scale": P(None), "bias": P(None)})
+
+
+def layernorm_apply(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf * params["scale"] + params["bias"]).astype(dt)
+
+
+def make_norm(kind: str, dim: int):
+    if kind == "rmsnorm":
+        return rmsnorm_init(dim), rmsnorm_apply
+    if kind == "layernorm":
+        return layernorm_init(dim), layernorm_apply
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# embeddings (dense or hashed virtual table)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingPlan:
+    vocab: int
+    dim: int
+    hashed: Optional[H.HashedSpec] = None
+    dtype: Any = jnp.bfloat16
+    scale_by_sqrt_dim: bool = False   # gemma convention
+
+
+def embedding_init(plan: EmbeddingPlan, key):
+    # std 1/sqrt(dim): keeps TIED logits (x @ emb^T) at unit scale at init
+    # (std-1 embeddings make tied logits ~N(0, d) — loss starts ~d/ln-scale
+    # instead of ln(V)); scale_by_sqrt_dim archs (gemma) restore unit-RMS
+    # inputs via the sqrt(d) input multiplier.
+    scale = 1.0 / math.sqrt(plan.dim)
+    if plan.hashed is not None:
+        assert plan.hashed.virtual_shape == (plan.vocab, plan.dim)
+        w = H.init(key, plan.hashed, scale=scale, dtype=plan.dtype)
+        return {"emb": w}, {"emb": bank_pspec(plan.hashed)}
+    w = (jax.random.normal(key, (plan.vocab, plan.dim), jnp.float32)
+         * scale).astype(plan.dtype)
+    return {"emb": w}, {"emb": P(TP, FSDP)}
+
+
+def embedding_lookup(plan: EmbeddingPlan, params, tokens):
+    if plan.hashed is not None:
+        x = H.materialize_rows(params["emb"], plan.hashed, tokens)
+    else:
+        x = jnp.take(params["emb"], tokens, axis=0)
+    if plan.scale_by_sqrt_dim:
+        x = x * jnp.asarray(math.sqrt(plan.dim), x.dtype)
+    return x
+
+
+def embedding_logits(plan: EmbeddingPlan, params, x):
+    """Tied LM head: x @ emb^T."""
+    if plan.hashed is not None:
+        v = H.materialize(params["emb"], plan.hashed, dtype=x.dtype)
+        return jax.lax.dot_general(
+            x, v.T, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    return jax.lax.dot_general(
+        x, params["emb"].astype(x.dtype).T,
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int):
+    """Whisper-style fixed sinusoidal embeddings (seq, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / max(half - 1, 1))
+    ang = jnp.arange(seq, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    return {
+        "relu": jax.nn.relu,
+        "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+        "silu": jax.nn.silu,
+        "relu_sq": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+def dropout(key, x, rate: float, deterministic: bool):
+    if deterministic or rate <= 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, jnp.zeros_like(x))

@@ -1,0 +1,289 @@
+"""Mamba-2 (SSD) block — chunked training form + O(1) decode state.
+
+Used by the zamba2 hybrid architecture.  Projections are hashed-capable
+(the paper technique applies to in/out projections; the SSM dynamics
+parameters A/dt/D/conv are tiny and structurally constrained — left dense,
+see DESIGN.md §5).
+
+Shapes: x (B, L, d_model) -> y (B, L, d_model)
+state: conv buffer (B, d_conv-1, conv_dim) + SSM state (B, H, P, N).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hashed as H
+from repro.nn import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Plan:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    d_conv: int = 4
+    n_groups: int = 1
+    chunk: int = 128
+    dtype: Any = jnp.bfloat16
+    hash_in: Optional[H.HashedSpec] = None
+    hash_out: Optional[H.HashedSpec] = None
+    hash_path: str = "auto"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def in_dim(self) -> int:
+        # z, x, B, C, dt
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state \
+            + self.num_heads
+
+
+def init(plan: Mamba2Plan, key):
+    ks = jax.random.split(key, 4)
+    params, specs = {}, {}
+    p, s = L.linear_init(
+        L.LinearPlan(plan.d_model, plan.in_dim, hashed=plan.hash_in,
+                     pspec=(L.FSDP, L.TP), dtype=plan.dtype,
+                     hash_path=plan.hash_path), ks[0])
+    params["in_proj"], specs["in_proj"] = p, s
+    p, s = L.linear_init(
+        L.LinearPlan(plan.d_inner, plan.d_model, hashed=plan.hash_out,
+                     pspec=(L.TP, L.FSDP), dtype=plan.dtype,
+                     hash_path=plan.hash_path), ks[1])
+    params["out_proj"], specs["out_proj"] = p, s
+
+    params["conv_w"] = (jax.random.normal(
+        ks[2], (plan.d_conv, plan.conv_dim), jnp.float32)
+        * (1.0 / math.sqrt(plan.d_conv))).astype(plan.dtype)
+    specs["conv_w"] = P(None, L.TP)
+    params["conv_b"] = jnp.zeros((plan.conv_dim,), plan.dtype)
+    specs["conv_b"] = P(L.TP)
+
+    h = plan.num_heads
+    params["A_log"] = jnp.log(jnp.linspace(1.0, 16.0, h, dtype=jnp.float32))
+    specs["A_log"] = P(L.TP)
+    params["D"] = jnp.ones((h,), jnp.float32)
+    specs["D"] = P(L.TP)
+    params["dt_bias"] = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[3], (h,), jnp.float32,
+                                   math.log(1e-3), math.log(1e-1)))))
+    specs["dt_bias"] = P(L.TP)
+    p, s = L.rmsnorm_init(plan.d_inner)
+    params["norm"], specs["norm"] = p, s
+    return params, specs
+
+
+def _split(plan: Mamba2Plan, zxbcdt):
+    di, g, n, h = plan.d_inner, plan.n_groups, plan.d_state, plan.num_heads
+    z = zxbcdt[..., :di]
+    xin = zxbcdt[..., di:2 * di]
+    bb = zxbcdt[..., 2 * di:2 * di + g * n]
+    cc = zxbcdt[..., 2 * di + g * n:2 * di + 2 * g * n]
+    dt = zxbcdt[..., 2 * di + 2 * g * n:]
+    assert dt.shape[-1] == h
+    return z, xin, bb, cc, dt
+
+
+def _conv_train(plan, params, xbc):
+    """Causal depthwise conv over (B, L, conv_dim)."""
+    w = params["conv_w"].astype(jnp.float32)           # (d_conv, C)
+    pad = plan.d_conv - 1
+    xp = jnp.pad(xbc.astype(jnp.float32), ((0, 0), (pad, 0), (0, 0)))
+    y = sum(xp[:, i:i + xbc.shape[1], :] * w[i] for i in range(plan.d_conv))
+    return jax.nn.silu(y + params["conv_b"].astype(jnp.float32)
+                       ).astype(xbc.dtype)
+
+
+def _ssd_chunked(plan, xh, bb, cc, dt, a, init_state=None):
+    """Chunked SSD scan.
+
+    xh (B,L,H,P); bb/cc (B,L,G,N); dt (B,L,H) post-softplus; a (H,) negative.
+    Returns (y (B,L,H,P), final_state (B,H,P,N)).
+    """
+    bsz, l, h, p = xh.shape
+    g, n = bb.shape[2], bb.shape[3]
+    q = plan.chunk
+    assert l % q == 0, (l, q)
+    nc = l // q
+    rep = h // g
+
+    def reshape_c(t):
+        return t.reshape(bsz, nc, q, *t.shape[2:])
+
+    xh_c = xh.reshape(bsz, nc, q, h, p).astype(jnp.float32)
+    b_c, c_c, dt_c = map(reshape_c, (bb, cc, dt))
+    b_c = b_c.astype(jnp.float32)
+    c_c = c_c.astype(jnp.float32)
+    da = dt_c * a[None, None, None, :]                       # (B,NC,Q,H)
+    da_cum = jnp.cumsum(da, axis=2)
+    da_total = da_cum[:, :, -1, :]                           # (B,NC,H)
+
+    # intra-chunk (quadratic within chunk):
+    # Y[q] = sum_{s<=q} (C_q . B_s) exp(da_cum[q]-da_cum[s]) dt_s x_s
+    lmat = jnp.tril(jnp.ones((q, q), bool))
+    diff = da_cum[:, :, :, None, :] - da_cum[:, :, None, :, :]  # (B,NC,Q,S,H)
+    decay = jnp.where(lmat[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcqgn,bcsgn->bcqsg", c_c, b_c)      # (B,NC,Q,S,G)
+    scores = jnp.repeat(scores, rep, axis=-1)                # (B,NC,Q,S,H)
+    y_intra = jnp.einsum("bcqsh,bcqsh,bcsh,bcshp->bcqhp",
+                         scores, decay, dt_c, xh_c)
+
+    # chunk-local end states: S_c = sum_s exp(da_total-da_cum_s) dt_s B_s x_s^T
+    w_end = jnp.exp(da_total[:, :, None, :] - da_cum)        # (B,NC,Q,H)
+    b_h = jnp.repeat(b_c, rep, axis=3) if g != h else b_c    # (B,NC,Q,H,N)
+    state_loc = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                           w_end * dt_c, b_h, xh_c)
+
+    # inter-chunk recurrence over nc chunks
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(s, args):
+        sl, dtot = args                                      # (B,H,P,N),(B,H)
+        s_new = jnp.exp(dtot)[:, :, None, None] * s + sl
+        return s_new, s                                      # emit entering state
+
+    final_state, s_in = jax.lax.scan(
+        step, init_state,
+        (state_loc.transpose(1, 0, 2, 3, 4), da_total.transpose(1, 0, 2)))
+
+    s_in = s_in.transpose(1, 0, 2, 3, 4)                     # (B,NC,H,P,N)
+    c_h = jnp.repeat(c_c, rep, axis=3) if g != h else c_c
+    y_inter = jnp.einsum("bcqhn,bcqh,bchpn->bcqhp",
+                         c_h, jnp.exp(da_cum), s_in)
+    y = (y_intra + y_inter).reshape(bsz, l, h, p)
+    return y, final_state
+
+
+def apply_train(plan: Mamba2Plan, params, x):
+    """Full-sequence forward (training / prefill). Returns (y, state).
+
+    Ragged prefill: sequences are right-padded to a multiple of the SSD
+    chunk; padded positions get dt = 0, which makes them exact no-ops on
+    the recurrence (decay exp(a*0) = 1, input term dt*B*x = 0), so the
+    returned state equals the unpadded one bit-for-bit."""
+    bsz, l0, _ = x.shape
+    pad = (-l0) % plan.chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    l = l0 + pad
+    zxbcdt = L.linear_apply(
+        L.LinearPlan(plan.d_model, plan.in_dim, hashed=plan.hash_in,
+                     dtype=plan.dtype, hash_path=plan.hash_path),
+        params["in_proj"], x)
+    z, xin, bb, cc, dt = _split(plan, zxbcdt)
+    xbc_pre = jnp.concatenate([xin, bb, cc], axis=-1)
+    xbc = _conv_train(plan, params, xbc_pre)
+    xin = xbc[..., :plan.d_inner]
+    bb = xbc[..., plan.d_inner:plan.d_inner + plan.n_groups * plan.d_state]
+    cc = xbc[..., plan.d_inner + plan.n_groups * plan.d_state:]
+
+    h, p, g, n = plan.num_heads, plan.head_dim, plan.n_groups, plan.d_state
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+    if pad:
+        valid = (jnp.arange(l) < l0)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    a = -jnp.exp(params["A_log"])
+    y, state = _ssd_chunked(
+        plan,
+        xin.reshape(bsz, l, h, p),
+        bb.reshape(bsz, l, g, n),
+        cc.reshape(bsz, l, g, n),
+        dt, a)
+    y = y + params["D"][None, None, :, None] \
+        * xin.reshape(bsz, l, h, p).astype(jnp.float32)
+    y = y.reshape(bsz, l, plan.d_inner).astype(plan.dtype)
+    y = L.rmsnorm_apply(params["norm"], y) * jax.nn.silu(z)
+    out = L.linear_apply(
+        L.LinearPlan(plan.d_inner, plan.d_model, hashed=plan.hash_out,
+                     dtype=plan.dtype, hash_path=plan.hash_path),
+        params["out_proj"], y)
+    if pad:
+        out = out[:, :l0]
+    # prefill -> decode handoff: conv buffer holds the last d_conv-1 *raw*
+    # (pre-activation) conv inputs of the REAL sequence (l0, not padded l)
+    tail = plan.d_conv - 1
+    conv_state = jax.lax.dynamic_slice_in_dim(
+        xbc_pre, l0 - tail, tail, axis=1) if l0 >= tail else jnp.pad(
+        xbc_pre[:, :l0], ((0, 0), (tail - l0, 0), (0, 0)))
+    return out, {"conv": conv_state.astype(plan.dtype), "ssm": state}
+
+
+def init_state(plan: Mamba2Plan, batch: int):
+    return {
+        "conv": jnp.zeros((batch, plan.d_conv - 1, plan.conv_dim),
+                          plan.dtype),
+        "ssm": jnp.zeros((batch, plan.num_heads, plan.head_dim,
+                          plan.d_state), jnp.float32),
+    }
+
+
+def state_pspec():
+    return {"conv": P(L.CACHE_BATCH, None, L.TP),
+            "ssm": P(L.CACHE_BATCH, L.TP, None, None)}
+
+
+def apply_decode(plan: Mamba2Plan, params, x, state):
+    """Single-token step. x (B, 1, d_model); returns (y, new_state)."""
+    bsz = x.shape[0]
+    zxbcdt = L.linear_apply(
+        L.LinearPlan(plan.d_model, plan.in_dim, hashed=plan.hash_in,
+                     dtype=plan.dtype, hash_path=plan.hash_path),
+        params["in_proj"], x)
+    z, xin, bb, cc, dt = _split(plan, zxbcdt[:, 0, :][:, None, :])
+    xbc = jnp.concatenate([xin, bb, cc], axis=-1)[:, 0, :]   # (B, conv_dim)
+
+    # rolling conv buffer
+    conv_buf = state["conv"]
+    window = jnp.concatenate([conv_buf, xbc[:, None, :]], axis=1)  # (B,dc,C)
+    w = params["conv_w"].astype(jnp.float32)
+    yc = jnp.einsum("bdc,dc->bc", window.astype(jnp.float32), w)
+    xbc_c = jax.nn.silu(yc + params["conv_b"].astype(jnp.float32)
+                        ).astype(plan.dtype)
+    new_conv = window[:, 1:, :]
+
+    di, g, n = plan.d_inner, plan.n_groups, plan.d_state
+    h, p = plan.num_heads, plan.head_dim
+    xin_c = xbc_c[:, :di].reshape(bsz, h, p)
+    bb_c = xbc_c[:, di:di + g * n].reshape(bsz, g, n)
+    cc_c = xbc_c[:, di + g * n:].reshape(bsz, g, n)
+    rep = h // g
+    bb_h = jnp.repeat(bb_c, rep, axis=1)                     # (B,H,N)
+    cc_h = jnp.repeat(cc_c, rep, axis=1)
+
+    dt_c = jax.nn.softplus(dt[:, 0, :].astype(jnp.float32)
+                           + params["dt_bias"][None, :])     # (B,H)
+    a = -jnp.exp(params["A_log"])                            # (H,)
+    decay = jnp.exp(dt_c * a[None, :])                       # (B,H)
+    s = state["ssm"]
+    s_new = (decay[:, :, None, None] * s
+             + jnp.einsum("bh,bhn,bhp->bhpn", dt_c,
+                          bb_h.astype(jnp.float32),
+                          xin_c.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhpn->bhp", cc_h.astype(jnp.float32), s_new)
+    y = y + params["D"][None, :, None] * xin_c.astype(jnp.float32)
+    y = y.reshape(bsz, 1, di).astype(plan.dtype)
+    y = L.rmsnorm_apply(params["norm"], y) * jax.nn.silu(z)
+    out = L.linear_apply(
+        L.LinearPlan(plan.d_inner, plan.d_model, hashed=plan.hash_out,
+                     dtype=plan.dtype, hash_path=plan.hash_path),
+        params["out_proj"], y)
+    return out, {"conv": new_conv, "ssm": s_new}

@@ -1,0 +1,197 @@
+"""Top-k mixture-of-experts with sort-based capacity dispatch (EP-shardable).
+
+Dispatch is MegaBlocks-style: flatten (token, choice) pairs, sort by expert,
+compute position-in-expert from per-expert offsets, scatter into an
+(E, C, d) buffer (overflow tokens dropped), run per-expert FFN, gather back
+with router-probability combine.  All shapes static; the (E, C, d) buffer is
+the all-to-all surface (sharded E over the model axis, C over batch axes).
+
+Hashed experts ("hashing across experts", DESIGN.md §5): one bank is shared
+by *all* experts of a layer — the virtual matrix is (E * d_model, d_ff) and
+expert e reads rows [e*d : (e+1)*d).  Collisions then share weights across
+experts too, compounding compression with expert parallelism.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hashed as H
+from repro.nn import layers as L
+from repro.distributed import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEPlan:
+    d_model: int
+    d_ff: int                    # per-expert hidden
+    num_experts: int
+    top_k: int
+    activation: str = "swiglu"
+    capacity_factor: float = 1.25
+    dtype: Any = jnp.bfloat16
+    router_dtype: Any = jnp.float32
+    # hashed expert banks (shared across experts)
+    hash_in: Optional[H.HashedSpec] = None
+    hash_gate: Optional[H.HashedSpec] = None
+    hash_out: Optional[H.HashedSpec] = None
+    aux_loss_coef: float = 0.01
+
+    @property
+    def gated(self) -> bool:
+        return self.activation in ("swiglu", "geglu")
+
+    @property
+    def inner_act(self):
+        if self.activation == "swiglu":
+            return jax.nn.silu
+        if self.activation == "geglu":
+            return lambda x: jax.nn.gelu(x, approximate=True)
+        return L.activation(self.activation)
+
+
+def init(plan: MoEPlan, key):
+    e, d, f = plan.num_experts, plan.d_model, plan.d_ff
+    ks = jax.random.split(key, 4)
+    params = {"router": (jax.random.normal(ks[0], (d, e), jnp.float32)
+                         * (1.0 / math.sqrt(d))).astype(jnp.float32)}
+    specs = {"router": P(L.FSDP, None)}
+
+    def bank_or_dense(k, name, vshape, hspec, dense_pspec):
+        if hspec is not None:
+            assert hspec.virtual_shape == vshape, (hspec.virtual_shape, vshape)
+            w = H.init(k, hspec, scale=1.0 / math.sqrt(d), dtype=plan.dtype)
+            ps = L.bank_pspec(hspec)
+        else:
+            # dense expert stacks: (E, in, out)
+            in_dim = vshape[0] // e
+            w = (jax.random.normal(k, (e, in_dim, vshape[1]), jnp.float32)
+                 * (1.0 / math.sqrt(in_dim))).astype(plan.dtype)
+            ps = dense_pspec
+        params[name], specs[name] = w, ps
+
+    bank_or_dense(ks[1], "in", (e * d, f), plan.hash_in,
+                  P(L.EXPERT, L.FSDP, None))
+    if plan.gated:
+        bank_or_dense(ks[2], "gate", (e * d, f), plan.hash_gate,
+                      P(L.EXPERT, L.FSDP, None))
+    bank_or_dense(ks[3], "out", (e * f, d), plan.hash_out,
+                  P(L.EXPERT, None, L.FSDP))
+    return params, specs
+
+
+def _expert_matmul(plan: MoEPlan, w, hspec: Optional[H.HashedSpec], xe,
+                   in_dim: int):
+    """xe: (B, E, C, in_dim) -> (B, E, C, out_dim); dense expert stack or
+    one shared hashed bank (paper technique compounding across experts)."""
+    if hspec is None:
+        # native-dtype expert dots (see layers.linear_apply rationale)
+        return jnp.einsum("becd,edf->becf", xe, w.astype(xe.dtype))
+
+    def one(carry, args):
+        e, xb = args                      # xb: (B, C, in_dim)
+
+        def inner(w_, xb_):
+            rows = e * in_dim + jnp.arange(in_dim, dtype=jnp.int32)
+            ve = H.materialize_rows(w_, hspec, rows, dtype=xb_.dtype)
+            return jax.lax.dot_general(
+                xb_, ve, (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32).astype(xb_.dtype)
+
+        return carry, jax.checkpoint(inner)(w, xb)
+
+    es = jnp.arange(plan.num_experts, dtype=jnp.int32)
+    _, ys = jax.lax.scan(one, None, (es, jnp.swapaxes(xe, 0, 1)))
+    return jnp.swapaxes(ys, 0, 1)
+
+
+def apply(plan: MoEPlan, params, x):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Dispatch is sort-based but STRICTLY batch-row-local (vmapped over B):
+    with batch sharded over the data axis, routing/sort/scatter never cross
+    shards, so the only inter-device traffic is the (B, E, C, d) expert
+    buffer re-sharding batch->expert (GSPMD all-to-all over the model
+    axis) — the GShard dispatch pattern.  A global sort here would make
+    XLA gather every token to every device (measured: ~34 GB of
+    all-reduce per layer at granite train_4k scale — see EXPERIMENTS.md
+    §Perf).  Capacity is per batch row: C = ceil(S*K/E * cf).
+    """
+    b, s, d = x.shape
+    e, k = plan.num_experts, plan.top_k
+    cap = int(math.ceil(s * k / e * plan.capacity_factor))
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(plan.router_dtype),
+                        params["router"].astype(plan.router_dtype))
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B, S, E)
+    top_p, top_e = jax.lax.top_k(probs, k)                     # (B, S, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # ---- load-balancing aux loss (Switch-style) ----
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = plan.aux_loss_coef * e * jnp.sum(frac_tokens * frac_probs)
+
+    def dispatch_row(xt, te, tp):
+        """xt (S,d), te/tp (S,K) -> (E,C,d) buffer + combine metadata.
+
+        The only scatter is over int32 SLOT IDS (4 B/slot); token VECTORS
+        then move via gather.  Scattering (S*K, d) f32 payloads directly
+        makes GSPMD emit masked partial-scatter all-reduces of the full
+        (B, S*K, d) tensor over the expert/model axis (measured ~0.4 TB
+        of wire per granite train step — §Perf it.2); id-scatter + gather
+        partitions cleanly."""
+        flat_e = te.reshape(-1)                                 # (S*K,)
+        flat_p = tp.reshape(-1).astype(plan.dtype)
+        flat_tok = jnp.repeat(jnp.arange(s), k)
+        order = jnp.argsort(flat_e)                             # stable
+        se, stok = flat_e[order], flat_tok[order]
+        counts = jax.ops.segment_sum(jnp.ones_like(se), se, num_segments=e)
+        starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                                  jnp.cumsum(counts)[:-1]])
+        pos_in_e = jnp.arange(s * k) - starts[se]
+        keep = pos_in_e < cap
+        slot = jnp.where(keep, se * cap + pos_in_e, e * cap)    # drop->trash
+        slot_src = jnp.full((e * cap + 1,), -1, jnp.int32)
+        slot_src = slot_src.at[slot].set(stok.astype(jnp.int32),
+                                         mode="drop")[:-1]      # (E*C,)
+        valid = slot_src >= 0
+        rows = xt[jnp.clip(slot_src, 0, s - 1)].astype(plan.dtype)
+        buf = jnp.where(valid[:, None], rows, 0)
+        return buf.reshape(e, cap, d), slot, order, keep, flat_p
+
+    xe, slot, order, keep, flat_p = jax.vmap(dispatch_row)(x, top_e, top_p)
+    xe = shd.constraint(xe, P(L.BATCH, L.EXPERT, None, None))
+
+    # ---- expert FFN (E sharded over the model axis: EP) ----
+    h = _expert_matmul(plan, params["in"], plan.hash_in, xe, d)
+    if plan.gated:
+        g = _expert_matmul(plan, params["gate"], plan.hash_gate, xe, d)
+        h = plan.inner_act(g) * h
+    else:
+        h = plan.inner_act(h)
+    ye = _expert_matmul(plan, params["out"], plan.hash_out, h, plan.d_ff)
+    ye = shd.constraint(ye, P(L.BATCH, L.EXPERT, None, None))
+    # combine reads token-ordered rows from expert-sharded ye; left to
+    # GSPMD that becomes a masked f32 all-reduce of the (B, S*K, d)
+    # gather (~4 GB/layer measured).  One explicit bf16 all-gather of ye
+    # (~1.3 GB/layer) then a local gather is 3x cheaper (§Perf it.2b).
+    ye = shd.constraint(ye, P(L.BATCH, None, None, None))
+
+    def combine_row(ye_r, slot_r, order_r, keep_r, flat_p_r):
+        flat_y = ye_r.reshape(e * cap, d)
+        gathered = jnp.where(
+            keep_r[:, None], flat_y[jnp.clip(slot_r, 0, e * cap - 1)],
+            jnp.zeros((1, d), plan.dtype))
+        unsort = jnp.argsort(order_r)
+        contrib = gathered[unsort] * flat_p_r[:, None]
+        return jnp.sum(contrib.reshape(s, k, d), axis=1)
+
+    y = jax.vmap(combine_row)(ye, slot, order, keep, flat_p)
+    return y.astype(x.dtype), aux

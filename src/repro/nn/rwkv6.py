@@ -1,0 +1,236 @@
+"""RWKV-6 "Finch" block: time-mix with data-dependent decay + channel-mix.
+
+Recurrence per head (key dim N, value dim N):
+    o_t = r_t @ (S_{t-1} + outer(u * k_t, v_t))
+    S_t = diag(w_t) @ S_{t-1} + outer(k_t, v_t)
+with w_t = exp(-exp(wraw_t)) in (0,1) *data-dependent* per key channel
+(the RWKV-6 contribution vs RWKV-5), produced by a LoRA on the token-shifted
+input.  Training uses lax.scan over time (compile-size friendly); decode is
+the O(1) single-step update.  Projections are hashed-capable; the tiny
+data-dependent mixers (LoRA) stay dense (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hashed as H
+from repro.nn import layers as L
+
+_MIX = ("r", "k", "v", "w", "g")
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Plan:
+    d_model: int
+    head_dim: int = 64
+    lora_dim: int = 32
+    decay_lora_dim: int = 64
+    dtype: Any = jnp.bfloat16
+    hash_r: Optional[H.HashedSpec] = None
+    hash_k: Optional[H.HashedSpec] = None
+    hash_v: Optional[H.HashedSpec] = None
+    hash_g: Optional[H.HashedSpec] = None
+    hash_o: Optional[H.HashedSpec] = None
+    hash_path: str = "auto"
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def init(plan: RWKV6Plan, key):
+    d = plan.d_model
+    ks = iter(jax.random.split(key, 24))
+    params, specs = {}, {}
+
+    def lin(name, hspec, in_d=d, out_d=d, ps=(L.FSDP, L.TP)):
+        p, s = L.linear_init(
+            L.LinearPlan(in_d, out_d, hashed=hspec, pspec=ps,
+                         dtype=plan.dtype, hash_path=plan.hash_path),
+            next(ks))
+        params[name], specs[name] = p, s
+
+    lin("r", plan.hash_r)
+    lin("k", plan.hash_k)
+    lin("v", plan.hash_v)
+    lin("g", plan.hash_g)
+    lin("o", plan.hash_o, ps=(L.TP, L.FSDP))
+
+    # token-shift ddlerp mixers: base mus + low-rank data dependence
+    params["mu_x"] = jnp.zeros((d,), jnp.float32)
+    specs["mu_x"] = P(None)
+    params["mu"] = jnp.zeros((len(_MIX), d), jnp.float32)
+    specs["mu"] = P(None, None)
+    params["mix_w1"] = (jax.random.normal(next(ks), (d, len(_MIX), plan.lora_dim),
+                                          jnp.float32) * 0.01).astype(jnp.float32)
+    specs["mix_w1"] = P(L.FSDP, None, None)
+    params["mix_w2"] = (jax.random.normal(next(ks), (len(_MIX), plan.lora_dim, d),
+                                          jnp.float32) * 0.01).astype(jnp.float32)
+    specs["mix_w2"] = P(None, None, L.FSDP)
+
+    # data-dependent decay LoRA
+    params["w0"] = jnp.full((d,), -6.0, jnp.float32)  # slow decay default
+    specs["w0"] = P(None)
+    params["decay_w1"] = (jax.random.normal(next(ks), (d, plan.decay_lora_dim),
+                                            jnp.float32) * 0.01)
+    specs["decay_w1"] = P(L.FSDP, None)
+    params["decay_w2"] = (jax.random.normal(next(ks), (plan.decay_lora_dim, d),
+                                            jnp.float32) * 0.01)
+    specs["decay_w2"] = P(None, L.FSDP)
+
+    params["u"] = (jax.random.normal(next(ks), (d,), jnp.float32) * 0.1)
+    specs["u"] = P(None)
+
+    # per-head group norm on the wkv output
+    params["ln_x"], specs["ln_x"] = L.layernorm_init(plan.head_dim)
+    return params, specs
+
+
+def _token_shift(x, last):
+    """shift right by one: [last, x_0, ..., x_{L-2}]; returns shifted, new_last."""
+    shifted = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted, x[:, -1, :]
+
+
+def _ddlerp(plan, params, x, x_shift):
+    """RWKV-6 data-dependent token-shift interpolation -> dict per target."""
+    dx = x_shift - x
+    xx = x + dx * params["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(jnp.einsum("bld,dmr->blmr", xx.astype(jnp.float32),
+                               params["mix_w1"]))
+    lora = jnp.einsum("blmr,mrd->blmd", lora, params["mix_w2"])
+    out = {}
+    for m, name in enumerate(_MIX):
+        mu = params["mu"][m].astype(jnp.float32) + lora[:, :, m, :]
+        out[name] = (x.astype(jnp.float32)
+                     + dx.astype(jnp.float32) * mu).astype(x.dtype)
+    return out
+
+
+def _decay(plan, params, xw):
+    lora = jnp.tanh(xw.astype(jnp.float32) @ params["decay_w1"]) \
+        @ params["decay_w2"]
+    wraw = params["w0"].astype(jnp.float32) + lora
+    return jnp.exp(-jnp.exp(wraw))                            # (B,L,D) in (0,1)
+
+
+def _wkv_scan(plan, r, k, v, w, u, state):
+    """r,k,v,w: (B,L,H,N); u: (H,N); state: (B,H,N,N) fp32."""
+    def step(s, args):
+        rt, kt, vt, wt = args                                 # (B,H,N)
+        kv = jnp.einsum("bhn,bhm->bhnm", kt, vt)              # key x value
+        out = jnp.einsum("bhn,bhnm->bhm", rt,
+                         s + u[None, :, :, None] * kv)
+        s_new = wt[..., None] * s + kv
+        return s_new, out
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    state, outs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(outs, 0, 1), state                    # (B,L,H,N)
+
+
+def apply_time_mix(plan: RWKV6Plan, params, x, state):
+    """x (B,L,D); state {"shift": (B,D), "wkv": (B,H,N,N)}."""
+    b, l, d = x.shape
+    h, n = plan.num_heads, plan.head_dim
+    x_shift, new_last = _token_shift(x, state["shift"])
+    mixed = _ddlerp(plan, params, x, x_shift)
+
+    def proj(name, hspec, xin):
+        return L.linear_apply(
+            L.LinearPlan(d, d, hashed=hspec, dtype=plan.dtype,
+                         hash_path=plan.hash_path), params[name], xin)
+
+    r = proj("r", plan.hash_r, mixed["r"]).reshape(b, l, h, n)
+    k = proj("k", plan.hash_k, mixed["k"]).reshape(b, l, h, n)
+    v = proj("v", plan.hash_v, mixed["v"]).reshape(b, l, h, n)
+    g = proj("g", plan.hash_g, mixed["g"])
+    w = _decay(plan, params, mixed["w"]).reshape(b, l, h, n)
+    u = params["u"].reshape(h, n)
+
+    out, wkv_state = _wkv_scan(plan, r, k, v, w, u, state["wkv"])
+    out = L.layernorm_apply(params["ln_x"], out.astype(plan.dtype))
+    out = out.reshape(b, l, d) * jax.nn.silu(g)
+    y = L.linear_apply(
+        L.LinearPlan(d, d, hashed=plan.hash_o, dtype=plan.dtype,
+                     hash_path=plan.hash_path), params["o"], out)
+    return y, {"shift": new_last, "wkv": wkv_state}
+
+
+def time_mix_state(plan: RWKV6Plan, batch: int):
+    h, n = plan.num_heads, plan.head_dim
+    return {"shift": jnp.zeros((batch, plan.d_model), plan.dtype),
+            "wkv": jnp.zeros((batch, h, n, n), jnp.float32)}
+
+
+def time_mix_state_pspec():
+    return {"shift": P(L.BATCH, None), "wkv": P(L.BATCH, L.TP, None, None)}
+
+
+# ---------------------------------------------------------------------------
+# channel mix
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChannelMixPlan:
+    d_model: int
+    d_ff: int
+    dtype: Any = jnp.bfloat16
+    hash_k: Optional[H.HashedSpec] = None
+    hash_v: Optional[H.HashedSpec] = None
+    hash_r: Optional[H.HashedSpec] = None
+    hash_path: str = "auto"
+
+
+def channel_mix_init(plan: ChannelMixPlan, key):
+    d, f = plan.d_model, plan.d_ff
+    ks = iter(jax.random.split(key, 4))
+    params, specs = {}, {}
+    for name, i, o, hs, ps in [
+        ("k", d, f, plan.hash_k, (L.FSDP, L.TP)),
+        ("v", f, d, plan.hash_v, (L.TP, L.FSDP)),
+        ("r", d, d, plan.hash_r, (L.FSDP, L.TP)),
+    ]:
+        p, s = L.linear_init(
+            L.LinearPlan(i, o, hashed=hs, pspec=ps, dtype=plan.dtype,
+                         hash_path=plan.hash_path), next(ks))
+        params[name], specs[name] = p, s
+    params["mu_k"] = jnp.full((d,), 0.5, jnp.float32)
+    specs["mu_k"] = P(None)
+    params["mu_r"] = jnp.full((d,), 0.5, jnp.float32)
+    specs["mu_r"] = P(None)
+    return params, specs
+
+
+def channel_mix_apply(plan: ChannelMixPlan, params, x, state):
+    """state: {"shift": (B, D)}."""
+    d, f = plan.d_model, plan.d_ff
+    x_shift, new_last = _token_shift(x, state["shift"])
+    dx = (x_shift - x).astype(jnp.float32)
+    xk = (x.astype(jnp.float32) + dx * params["mu_k"]).astype(x.dtype)
+    xr = (x.astype(jnp.float32) + dx * params["mu_r"]).astype(x.dtype)
+    k = L.linear_apply(L.LinearPlan(d, f, hashed=plan.hash_k,
+                                    dtype=plan.dtype,
+                                    hash_path=plan.hash_path),
+                       params["k"], xk)
+    k = jnp.square(jax.nn.relu(k))
+    v = L.linear_apply(L.LinearPlan(f, d, hashed=plan.hash_v,
+                                    dtype=plan.dtype,
+                                    hash_path=plan.hash_path),
+                       params["v"], k)
+    r = L.linear_apply(L.LinearPlan(d, d, hashed=plan.hash_r,
+                                    dtype=plan.dtype,
+                                    hash_path=plan.hash_path),
+                       params["r"], xr)
+    return jax.nn.sigmoid(r.astype(jnp.float32)).astype(x.dtype) * v, \
+        {"shift": new_last}
+
+
+def channel_mix_state(plan: ChannelMixPlan, batch: int):
+    return {"shift": jnp.zeros((batch, plan.d_model), plan.dtype)}

@@ -1,0 +1,1 @@
+from repro.paper import mlp, train  # noqa: F401

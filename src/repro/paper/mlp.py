@@ -1,0 +1,221 @@
+"""Paper-faithful MLPs (Chen et al. 2015 §6): HashNet + all baselines.
+
+Methods, at a common storage budget K^l per layer (counted strictly in
+*free parameters*, biases included, exactly as the paper counts):
+
+- ``hashed`` — HashedNets: V[i,j] = xi(i,j) * w[h(i,j)], dedicated hash
+  functions per layer (paper Eq. 7), ReLU, dropout on hidden activations.
+- ``dense`` — standard fully-connected net (used for the compression-1
+  teacher and, with shrunk hidden widths, the Equivalent-Size NN baseline).
+- ``rer`` — Random Edge Removal (Ciresan et al. 2011): a fixed random
+  connectivity mask at density = compression; the mask is *recomputed from
+  the hash*, so only surviving weights count toward storage.
+- ``lrd`` — Low-Rank Decomposition (Denil et al. 2013): V = U @ G with G
+  fixed Gaussian (std 1/sqrt(n_in), regenerated from seed, storage-free per
+  the paper's accounting) and U learned, rank chosen to meet the budget.
+
+Dark Knowledge (Hinton et al. 2014 / Ba & Caruana 2014) is a *training
+mode* (soft targets from a compression-1 teacher), implemented in
+``repro.paper.train.distill_targets`` and usable with any method, matching
+the paper's HashNet_DK and DK rows.
+
+Parameters are pytrees of f32 jnp arrays; all forward passes are pure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashed as H
+from repro.core.hashing import derive_seed
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPSpec:
+    dims: Tuple[int, ...]           # e.g. (784, 1000, 10) for "3 layers"
+    method: str = "dense"           # dense | hashed | rer | lrd
+    compression: float = 1.0        # storage budget fraction per layer
+    dropout: float = 0.3            # hidden-layer dropout (paper trains with)
+    input_dropout: float = 0.1
+    seed: int = 0
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.dims) - 1
+
+    def layer_budget(self, l: int) -> int:
+        """K^l: free weights for layer l under the compression budget."""
+        full = self.dims[l] * self.dims[l + 1]
+        return max(1, int(round(self.compression * full)))
+
+    def hashed_spec(self, l: int) -> H.HashedSpec:
+        return H.HashedSpec(
+            virtual_shape=(self.dims[l], self.dims[l + 1]),
+            compression=self.layer_budget(l) / (self.dims[l] * self.dims[l + 1]),
+            mode="element",
+            seed=derive_seed(self.seed, 0xAB, l),   # dedicated h^l per layer
+            panel_cols=0,                            # paper: global buckets
+        )
+
+    def lrd_rank(self, l: int) -> int:
+        """budget = rank * min(n_in, n_out): the *learned* factor sits on
+        the smaller side (maximizes rank; otherwise a wide->narrow layer
+        degenerates to rank 1 with a fixed output direction)."""
+        return max(1, self.layer_budget(l) // min(self.dims[l],
+                                                  self.dims[l + 1]))
+
+    def lrd_learn_left(self, l: int) -> bool:
+        """True: learn U (n_in, r), fix G (r, n_out); False: the reverse."""
+        return self.dims[l] <= self.dims[l + 1]
+
+    def free_params(self) -> int:
+        """Stored parameter count (the paper's x-axis)."""
+        total = 0
+        for l in range(self.n_layers):
+            if self.method == "dense":
+                total += self.dims[l] * self.dims[l + 1]
+            elif self.method == "hashed":
+                total += self.hashed_spec(l).num_buckets
+            elif self.method == "rer":
+                total += self.layer_budget(l)
+            elif self.method == "lrd":
+                total += self.lrd_rank(l) * min(self.dims[l],
+                                                self.dims[l + 1])
+            total += self.dims[l + 1]  # bias
+        return total
+
+
+def equivalent_dense_dims(dims: Sequence[int], compression: float
+                          ) -> Tuple[int, ...]:
+    """The paper's Equivalent-Size NN: shrink every hidden layer by a common
+    factor until stored params match the budget (weights + biases)."""
+    dims = tuple(dims)
+    if len(dims) == 2:
+        return dims
+
+    def params_at(h: float) -> float:
+        ds = [dims[0]] + [max(1.0, h)] * (len(dims) - 2) + [dims[-1]]
+        return sum(ds[i] * ds[i + 1] + ds[i + 1] for i in range(len(ds) - 1))
+
+    target = compression * params_at(dims[1])
+    lo, hi = 1.0, float(dims[1])
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if params_at(mid) > target:
+            hi = mid
+        else:
+            lo = mid
+    h = max(1, int(round(lo)))
+    return (dims[0],) + (h,) * (len(dims) - 2) + (dims[-1],)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _rer_mask(spec: MLPSpec, l: int) -> jnp.ndarray:
+    """Fixed random connectivity mask at density=compression; derived from
+    the stateless hash so it is never stored (same trick as the paper)."""
+    from repro.core import hashing
+    i = jnp.arange(spec.dims[l], dtype=jnp.int32)[:, None]
+    j = jnp.arange(spec.dims[l + 1], dtype=jnp.int32)[None, :]
+    h = hashing.hash_key(i, j, derive_seed(spec.seed, 0xE, l))
+    # keep edge iff h < compression * 2^32
+    thresh = np.uint32(min(0xFFFFFFFF, int(spec.compression * 2.0 ** 32)))
+    return (h < thresh).astype(jnp.float32)
+
+
+def _lrd_fixed(spec: MLPSpec, l: int) -> jnp.ndarray:
+    """Fixed Gaussian factor, std 1/sqrt(n_in) (paper §6): shape (r, n_out)
+    when the left factor is learned, (n_in, r) when the right is."""
+    r = spec.lrd_rank(l)
+    key = jax.random.PRNGKey(derive_seed(spec.seed, 0x1d, l))
+    shape = ((r, spec.dims[l + 1]) if spec.lrd_learn_left(l)
+             else (spec.dims[l], r))
+    return (jax.random.normal(key, shape, jnp.float32)
+            / math.sqrt(spec.dims[l]))
+
+
+def init(spec: MLPSpec, key) -> List[dict]:
+    params = []
+    for l in range(spec.n_layers):
+        key, k = jax.random.split(key)
+        n_in, n_out = spec.dims[l], spec.dims[l + 1]
+        scale = 1.0 / math.sqrt(n_in)
+        b = jnp.zeros((n_out,), jnp.float32)
+        if spec.method == "hashed":
+            hs = spec.hashed_spec(l)
+            params.append({"w": H.init(k, hs, scale=scale), "b": b})
+        elif spec.method == "rer":
+            w = jax.random.normal(k, (n_in, n_out), jnp.float32) * scale
+            params.append({"w": w, "b": b})
+        elif spec.method == "lrd":
+            # Var(V) = r * Var(learned) * Var(fixed) with Var(fixed)=1/n_in;
+            # learned ~ N(0, 1/r) keeps the virtual init at the dense scale.
+            r = spec.lrd_rank(l)
+            shape = (n_in, r) if spec.lrd_learn_left(l) else (r, n_out)
+            u = (jax.random.normal(k, shape, jnp.float32)
+                 / math.sqrt(max(r, 1)))
+            params.append({"u": u, "b": b})
+        else:
+            w = jax.random.normal(k, (n_in, n_out), jnp.float32) * scale
+            params.append({"w": w, "b": b})
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer(spec: MLPSpec, l: int, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if spec.method == "hashed":
+        y = H.matmul(x, p["w"], spec.hashed_spec(l), path="materialize")
+    elif spec.method == "rer":
+        y = x @ (p["w"] * _rer_mask(spec, l))
+    elif spec.method == "lrd":
+        if spec.lrd_learn_left(l):
+            y = (x @ p["u"]) @ _lrd_fixed(spec, l)
+        else:
+            y = (x @ _lrd_fixed(spec, l)) @ p["u"]
+    else:
+        y = x @ p["w"]
+    return y + p["b"]
+
+
+def apply(spec: MLPSpec, params: List[dict], x: jnp.ndarray,
+          key=None, train: bool = False) -> jnp.ndarray:
+    """x (B, 784) -> logits (B, C).  ReLU + dropout as in the paper."""
+    drop = train and key is not None
+    if drop and spec.input_dropout > 0:
+        key, k = jax.random.split(key)
+        keep = 1.0 - spec.input_dropout
+        x = x * jax.random.bernoulli(k, keep, x.shape) / keep
+    for l in range(spec.n_layers):
+        x = _layer(spec, l, params[l], x)
+        if l < spec.n_layers - 1:
+            x = jax.nn.relu(x)
+            if drop and spec.dropout > 0:
+                key, k = jax.random.split(key)
+                keep = 1.0 - spec.dropout
+                x = x * jax.random.bernoulli(k, keep, x.shape) / keep
+    return x
+
+
+def xent(logits, labels) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], 1))
+
+
+def distill_loss(logits, labels, soft_targets, alpha: float = 0.5,
+                 temperature: float = 4.0) -> jnp.ndarray:
+    """Dark-Knowledge combined objective (paper §6: weighted combination of
+    original labels and softened teacher softmax)."""
+    hard = xent(logits, labels)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32) / temperature)
+    soft = -jnp.mean(jnp.sum(soft_targets * logp, axis=-1)) * temperature ** 2
+    return alpha * hard + (1.0 - alpha) * soft

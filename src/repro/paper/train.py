@@ -1,0 +1,160 @@
+"""Paper-faithful training loop for the MLP experiments.
+
+Chen et al. §6: SGD, minibatch 50, momentum, dropout, ReLU; hyperparameters
+tuned with Bayesian optimization.  Offline deviation (DESIGN.md §6): we use
+a fixed, hand-tuned recipe (momentum 0.9, cosine-decayed LR) shared across
+all methods — fair comparison, no per-method tuning advantage.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.paper import mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    epochs: int = 30
+    batch: int = 50                 # paper's minibatch size
+    lr: float = 0.05
+    momentum: float = 0.9
+    weight_decay: float = 0.0
+    # dark knowledge
+    distill_alpha: float = 0.5
+    distill_temp: float = 4.0
+
+
+def _lr_at(cfg: TrainConfig, step: int, total: int) -> float:
+    prog = step / max(total, 1)
+    return cfg.lr * (0.5 * (1 + np.cos(np.pi * prog)))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _step(spec: mlp.MLPSpec, use_soft: bool, params, mu, x, y, soft, key,
+          lr, alpha, temp, momentum):
+    def loss_fn(p):
+        logits = mlp.apply(spec, p, x, key=key, train=True)
+        if use_soft:
+            return mlp.distill_loss(logits, y, soft, alpha, temp)
+        return mlp.xent(logits, y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    mu = jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+    params = jax.tree.map(lambda p, m: p - lr * m, params, mu)
+    return params, mu, loss
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def _eval_logits(spec: mlp.MLPSpec, params, x):
+    return mlp.apply(spec, params, x, train=False)
+
+
+def evaluate(spec: mlp.MLPSpec, params, x: np.ndarray, y: np.ndarray,
+             batch: int = 2000) -> float:
+    """Test error rate in [0, 1]."""
+    wrong = 0
+    for i in range(0, len(x), batch):
+        logits = _eval_logits(spec, params, jnp.asarray(x[i:i + batch]))
+        wrong += int(np.sum(np.argmax(np.asarray(logits), -1)
+                            != y[i:i + batch]))
+    return wrong / len(x)
+
+
+def soft_targets(spec: mlp.MLPSpec, params, x: np.ndarray,
+                 temperature: float, batch: int = 2000) -> np.ndarray:
+    """Teacher's softened softmax over the training set (DK targets)."""
+    outs = []
+    for i in range(0, len(x), batch):
+        logits = _eval_logits(spec, params, jnp.asarray(x[i:i + batch]))
+        outs.append(np.asarray(
+            jax.nn.softmax(logits.astype(jnp.float32) / temperature)))
+    return np.concatenate(outs)
+
+
+def fit(spec: mlp.MLPSpec, x: np.ndarray, y: np.ndarray,
+        cfg: TrainConfig = TrainConfig(), seed: int = 0,
+        soft: Optional[np.ndarray] = None,
+        x_test: Optional[np.ndarray] = None,
+        y_test: Optional[np.ndarray] = None,
+        log_every: int = 0) -> Tuple[list, Dict]:
+    """Train; returns (params, history)."""
+    key = jax.random.PRNGKey(seed)
+    key, kinit = jax.random.split(key)
+    params = mlp.init(spec, kinit)
+    mu = jax.tree.map(jnp.zeros_like, params)
+
+    n = len(x)
+    steps_per_epoch = max(1, n // cfg.batch)
+    total = cfg.epochs * steps_per_epoch
+    rng = np.random.default_rng(seed)
+    use_soft = soft is not None
+    if not use_soft:
+        soft_all = np.zeros((n, int(y.max()) + 1), np.float32)
+    else:
+        soft_all = soft
+
+    hist = {"loss": [], "test_err": []}
+    step = 0
+    for epoch in range(cfg.epochs):
+        perm = rng.permutation(n)
+        for i in range(steps_per_epoch):
+            idx = perm[i * cfg.batch:(i + 1) * cfg.batch]
+            key, k = jax.random.split(key)
+            lr = _lr_at(cfg, step, total)
+            params, mu, loss = _step(
+                spec, use_soft, params, mu,
+                jnp.asarray(x[idx]), jnp.asarray(y[idx]),
+                jnp.asarray(soft_all[idx]), k,
+                jnp.float32(lr), jnp.float32(cfg.distill_alpha),
+                jnp.float32(cfg.distill_temp), jnp.float32(cfg.momentum))
+            step += 1
+        hist["loss"].append(float(loss))
+        if log_every and (epoch + 1) % log_every == 0 and x_test is not None:
+            err = evaluate(spec, params, x_test, y_test)
+            hist["test_err"].append(err)
+            print(f"  epoch {epoch+1:3d} loss {float(loss):.4f} "
+                  f"test_err {err*100:.2f}%", flush=True)
+    return params, hist
+
+
+def run_method(method: str, dims, compression: float,
+               x, y, x_test, y_test, cfg: TrainConfig = TrainConfig(),
+               seed: int = 0, teacher=None) -> Dict:
+    """One (method, compression) cell of the paper's tables.
+
+    method in {hashed, hashed_dk, nn, dk, rer, lrd}; `teacher` is
+    (spec, params) of the compression-1 dense net for the *_dk variants.
+    """
+    base = dict(dropout=0.3, input_dropout=0.1, seed=seed)
+    soft = None
+    if method in ("nn", "dk"):
+        eq_dims = mlp.equivalent_dense_dims(dims, compression)
+        spec = mlp.MLPSpec(eq_dims, method="dense", **base)
+    elif method in ("hashed", "hashed_dk"):
+        spec = mlp.MLPSpec(tuple(dims), method="hashed",
+                           compression=compression, **base)
+    elif method == "rer":
+        spec = mlp.MLPSpec(tuple(dims), method="rer",
+                           compression=compression, **base)
+    elif method == "lrd":
+        spec = mlp.MLPSpec(tuple(dims), method="lrd",
+                           compression=compression, **base)
+    else:
+        raise ValueError(method)
+
+    if method in ("dk", "hashed_dk"):
+        assert teacher is not None, "DK needs a compression-1 teacher"
+        tspec, tparams = teacher
+        soft = soft_targets(tspec, tparams, x, cfg.distill_temp)
+
+    params, hist = fit(spec, x, y, cfg=cfg, seed=seed, soft=soft)
+    err = evaluate(spec, params, x_test, y_test)
+    return {"method": method, "compression": compression,
+            "test_err": err, "free_params": spec.free_params(),
+            "dims": spec.dims}

@@ -1,0 +1,197 @@
+"""Batched serving engine: continuous-batching prefill/decode over a
+fixed-slot KV cache.
+
+Design (vLLM-style, adapted to XLA's static-shape world):
+
+- ``slots`` fixed decode batch; each slot holds one active sequence.
+- Requests queue up; free slots are filled by *prefill* (one sequence at a
+  time, written into the slot's cache region), decode advances ALL slots
+  in lockstep with a single ``decode_step`` (B = n_slots, S = 1).
+- Finished sequences (EOS or max_len) free their slot immediately
+  (continuous batching — no head-of-line blocking on long generations).
+- Per-slot cache layout: the model's init_cache(batch=slots) pytree;
+  prefill writes through a batch=1 cache then scatters into the slot.
+
+Sampling: greedy or temperature top-k, fp32 logits.
+
+All jitted functions are donate-free and cache-functional (cache in,
+cache out) so the same engine code runs under pjit on a mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # (P,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0            # 0 => greedy
+    # filled by the engine
+    tokens: Optional[List[int]] = None
+    done: bool = False
+    extras: Optional[Dict[str, Any]] = None   # frames / image_embeds
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0
+
+
+def _slot_update(cache, slot_cache, slot_idx):
+    """Scatter a batch=1 cache pytree into slot `slot_idx` of the batched
+    cache.  Leaves whose leading dims are (layers, batch, ...) or
+    (batch, ...) are handled by matching the batch-dim size."""
+    def upd(full, one):
+        one = jnp.asarray(one)
+        if full.ndim != one.ndim or full.ndim == 0:
+            return full            # index-like leaves: engine-managed
+        # find the batch axis: first axis where full=N and one=1
+        for ax in range(full.ndim):
+            if one.shape[ax] == 1 and full.shape[ax] != 1:
+                start = [0] * full.ndim
+                start[ax] = slot_idx
+                return jax.lax.dynamic_update_slice(
+                    full, one.astype(full.dtype), tuple(start))
+        return full
+    return jax.tree.map(upd, cache, slot_cache)
+
+
+class Engine:
+    def __init__(self, model: Model, params, slots: int = 4,
+                 max_len: int = 512, eos_id: int = 1, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = [_Slot() for _ in range(slots)]
+        self.n_slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = model.init_cache(slots, max_len)
+        # per-slot write positions: every slot decodes at its own index
+        # (true continuous batching); supported by decoder/zamba/rwkv
+        # kinds.  encdec keeps the scalar index (synchronous waves).
+        self.per_row = model.cfg.arch_kind in ("decoder", "zamba", "rwkv")
+        if self.per_row:
+            self.cache["index"] = jnp.zeros((slots,), jnp.int32)
+        self._key = jax.random.PRNGKey(seed)
+        self._queue: List[Request] = []
+        self._done: List[Request] = []
+        self._tokens = np.zeros((slots, 1), np.int32)
+
+        self._prefill = jax.jit(model.prefill)
+        self._decode = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.tokens = []
+        self._queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.req is None]
+
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots (continuous batching).
+
+        Engineering note: each admission prefs a batch=1 cache and
+        scatters it into the slot — static shapes per prompt length
+        bucket; production would bucket prompt lengths to bound
+        recompilation (we pad to max_len buckets of 64)."""
+        for i in self._free_slots():
+            if not self._queue:
+                break
+            req = self._queue.pop(0)
+            p = len(req.prompt)
+            pad = (-p) % 64
+            prompt = np.pad(req.prompt, (0, pad))
+            batch = {"tokens": jnp.asarray(prompt[None, :p + pad]),
+                     "cache": self.model.init_cache(1, self.max_len)}
+            if req.extras:
+                batch.update({k: jnp.asarray(v) for k, v in
+                              req.extras.items()})
+            # teacher-force only the real prompt: mask pad by re-slicing
+            batch["tokens"] = batch["tokens"][:, :p]
+            logits, c1 = self._prefill(self.params, batch)
+            self.cache = _slot_update(self.cache, c1, i)
+            pos = int(np.asarray(c1["index"]))
+            if self.per_row:
+                self.cache["index"] = \
+                    self.cache["index"].at[i].set(pos)
+            else:
+                self.cache["index"] = c1["index"]
+            self.slots[i] = _Slot(req, pos)
+            tok = self._sample(logits[:, -1])
+            req.tokens.append(int(tok[0]))
+            self._tokens[i, 0] = int(tok[0])
+
+    def _sample(self, logits) -> np.ndarray:
+        logits = jnp.asarray(logits, jnp.float32)
+        temps = [s.req.temperature if s.req else 0.0 for s in self.slots]
+        if logits.shape[0] != self.n_slots:     # prefill path (B=1)
+            temps = [temps[0]]
+        self._key, k = jax.random.split(self._key)
+        greedy = jnp.argmax(logits, -1)
+        t = jnp.asarray([max(t, 1e-6) for t in temps])[:logits.shape[0]]
+        sampled = jax.random.categorical(k, logits / t[:, None])
+        use_greedy = jnp.asarray([tt <= 0.0 for tt in temps]
+                                 )[:logits.shape[0]]
+        return np.asarray(jnp.where(use_greedy, greedy, sampled),
+                          np.int32)
+
+    def _retire(self) -> None:
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            r = s.req
+            if (r.tokens and r.tokens[-1] == self.eos_id) \
+                    or len(r.tokens) >= r.max_new_tokens:
+                r.done = True
+                self._done.append(r)
+                self.slots[i] = _Slot()
+
+    def step(self) -> int:
+        """One engine tick: admit, decode all active slots, retire."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self._tokens), self.cache)
+        toks = self._sample(logits[:, -1])
+        for i in active:
+            self.slots[i].req.tokens.append(int(toks[i]))
+            self._tokens[i, 0] = int(toks[i])
+            self.slots[i].pos += 1
+        self._retire()
+        return len(active)
+
+    def run(self, max_ticks: int = 10000) -> List[Request]:
+        ticks = 0
+        while (self._queue or any(s.req for s in self.slots)) \
+                and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self._done
+
+
+def generate_batch(model: Model, params, prompts: List[np.ndarray],
+                   max_new_tokens: int = 32, max_len: int = 512,
+                   slots: int = 4, eos_id: int = 1,
+                   extras: Optional[List[Dict]] = None) -> List[List[int]]:
+    """Convenience wrapper: submit all prompts, run to completion."""
+    eng = Engine(model, params, slots=slots, max_len=max_len, eos_id=eos_id)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, prompt=np.asarray(p, np.int32),
+                           max_new_tokens=max_new_tokens,
+                           extras=extras[i] if extras else None))
+    done = eng.run()
+    return [r.tokens for r in sorted(done, key=lambda r: r.uid)]

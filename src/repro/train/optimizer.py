@@ -1,0 +1,113 @@
+"""Optimizers (built from scratch — no optax in this environment).
+
+- sgd_momentum: the paper's optimizer (Chen et al. §6 train HashedNets with
+  SGD + momentum + dropout).
+- adamw: default for the LLM-scale architectures.
+
+States are fp32 regardless of param dtype; updates are computed in fp32 and
+cast back (no separate fp32 master copy — documented in DESIGN.md).
+Schedules: constant / warmup-cosine.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable   # params -> opt_state
+    update: Callable  # (grads, opt_state, params, step) -> (new_params, new_state)
+
+
+def constant_lr(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_cosine_lr(peak: float, warmup_steps: int, total_steps: int,
+                     final_frac: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = peak * (final_frac + (1 - final_frac)
+                      * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gnorm
+
+
+def sgd_momentum(lr_fn, momentum: float = 0.9,
+                 weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+
+        def upd(g, mu, p):
+            g32 = g.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            mu_new = momentum * mu + g32
+            p_new = p.astype(jnp.float32) - lr * mu_new
+            return p_new.astype(p.dtype), mu_new
+
+        flat = jax.tree.map(upd, grads, state["mu"], params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mu": new_mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - jnp.power(b1, t)
+        c2 = 1.0 - jnp.power(b2, t)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m_new / c1
+            vhat = v_new / c2
+            p32 = p.astype(jnp.float32)
+            step_ = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32
+            return (p32 - lr * step_).astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        leaf = lambda x: isinstance(x, tuple)  # noqa: E731
+        return (jax.tree.map(lambda t: t[0], flat, is_leaf=leaf),
+                {"m": jax.tree.map(lambda t: t[1], flat, is_leaf=leaf),
+                 "v": jax.tree.map(lambda t: t[2], flat, is_leaf=leaf)})
+
+    return Optimizer(init, update)
+
+
+def make(name: str, lr_fn=None, **kw) -> Optimizer:
+    lr_fn = lr_fn or constant_lr(1e-3)
+    if name == "sgd_momentum":
+        return sgd_momentum(lr_fn, **kw)
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    raise ValueError(name)

@@ -1,0 +1,127 @@
+"""Train step factory: microbatched gradient accumulation + clipping +
+optimizer update, pjit-ready.
+
+TrainState is a plain dict pytree: {"params", "opt", "step"} — shardable,
+checkpointable, remeshable.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.train.optimizer import Optimizer, clip_by_global_norm
+
+
+def init_state(model: Model, optimizer: Optimizer, key,
+               with_residual: bool = False):
+    params = model.init(key)
+    state = {"params": params, "opt": optimizer.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if with_residual:
+        # error-feedback residuals for compressed gradient exchange
+        state["residual"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return state
+
+
+def state_pspecs(model: Model, optimizer: Optimizer,
+                 with_residual: bool = False):
+    """Logical spec tree matching init_state output."""
+    from jax.sharding import PartitionSpec as P
+
+    pspecs = model.pspecs()
+    # optimizer states mirror param shapes -> same specs per moment slot.
+    # NB: probe the STRUCTURE abstractly — optimizer.init on concrete
+    # ShapeDtypeStructs would materialize real zeros (terabytes at 405B).
+    params_struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    probe = jax.eval_shape(optimizer.init, params_struct)
+    opt_specs = {k: pspecs for k in probe.keys()}
+    out = {"params": pspecs, "opt": opt_specs, "step": P()}
+    if with_residual:
+        out["residual"] = pspecs
+    return out
+
+
+def make_train_step(model: Model, optimizer: Optimizer,
+                    num_microbatches: int = 1,
+                    clip_norm: Optional[float] = 1.0,
+                    accum_dtype=jnp.bfloat16,
+                    grad_compressor: Optional[str] = None,
+                    compress_ratio: float = 0.125):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch leaves have leading dim = global_batch; with num_microbatches > 1
+    they are reshaped to (MB, B/MB, ...) and grads are accumulated over a
+    lax.scan (bounds activation memory; the standard large-model recipe).
+
+    grad_compressor ("hashed_space" | "int8" | None): compress gradients
+    before the optimizer with error feedback — what a pod job applies on
+    the slow cross-pod link (train/grad_compress.py).  Requires
+    init_state(..., with_residual=True).
+    """
+    from repro.train import grad_compress
+    compress = (grad_compress.make_compressor(grad_compressor,
+                                              compress_ratio)
+                if grad_compressor else None)
+
+    def loss_fn(params, mb):
+        loss, metrics = model.train_loss(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if num_microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % num_microbatches == 0, (b, num_microbatches)
+                return x.reshape((num_microbatches, b // num_microbatches)
+                                 + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (loss, metrics), grads = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(accum_dtype), acc, grads)
+                return (acc, loss_acc + loss), metrics
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                body, (zeros, 0.0), mbs)
+            grads = jax.tree.map(
+                lambda g: (g.astype(jnp.float32)
+                           / num_microbatches).astype(accum_dtype), grads)
+            loss = loss_sum / num_microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = jnp.asarray(0.0, jnp.float32)
+
+        new_residual = None
+        if compress is not None:
+            grads, new_residual = compress(grads, state["residual"])
+
+        new_params, new_opt = optimizer.update(
+            grads, state["opt"], params, state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if new_residual is not None:
+            new_state["residual"] = new_residual
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = gnorm
+        return new_state, metrics
+
+    return train_step

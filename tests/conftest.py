@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Bound pytest's resident memory: compiled-executable caches from one
+    test module (e.g. 27 arch smokes) otherwise stack under later modules'
+    subprocess compiles on this 35 GB container."""
+    yield
+    jax.clear_caches()

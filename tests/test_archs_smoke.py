@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, shape + finiteness assertions; prefill/decode cache paths; hashed
+variants (the paper technique) on every family."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.configs import reduced
+from repro.models import build
+
+B, S = 2, 16
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, key=None, seq=S):
+    key = key or jax.random.PRNGKey(7)
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {
+        "tokens": jax.random.randint(k1, (B, seq), 0, cfg.vocab_size),
+        "targets": jax.random.randint(k2, (B, seq), 0, cfg.vocab_size),
+    }
+    if cfg.arch_kind == "encdec":
+        batch["frames"] = jax.random.normal(
+            k3, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.num_image_tokens:
+        batch["image_embeds"] = jax.random.normal(
+            k3, (B, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", C.ASSIGNED)
+def test_train_step_smoke(name):
+    cfg = reduced(C.get(name))
+    m = build(cfg)
+    params = m.init(KEY)
+    batch = _batch(cfg)
+    loss, metrics = jax.jit(m.train_loss)(params, batch)
+    assert np.isfinite(float(loss)), (name, float(loss))
+    assert float(loss) > 0.0
+    assert np.isfinite(float(metrics["accuracy"]))
+    # one SGD step must change the loss (gradients flow everywhere relevant)
+    grads = jax.grad(lambda p: m.train_loss(p, batch)[0])(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0.0
+
+
+@pytest.mark.parametrize("name", C.ASSIGNED)
+def test_prefill_decode_smoke(name):
+    cfg = reduced(C.get(name))
+    m = build(cfg)
+    params = m.init(KEY)
+    max_len = 32
+    batch = _batch(cfg, seq=8)
+    batch["cache"] = m.init_cache(B, max_len)
+    logits, cache = jax.jit(m.prefill)(params, batch)
+    assert logits.shape[:2] == (B, 1)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1).astype(jnp.int32)
+    for _ in range(2):
+        logits, cache = jax.jit(m.decode_step)(params, tok[:, None], cache)
+        assert logits.shape[:2] == (B, 1)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], -1).astype(jnp.int32)
+    assert int(cache["index"]) == 8 + 2 + cfg.num_image_tokens
+
+
+@pytest.mark.parametrize("name", ["llama3-405b", "granite-moe-1b-a400m",
+                                  "zamba2-2.7b", "rwkv6-7b",
+                                  "whisper-medium"])
+def test_hashed_variant_smoke(name):
+    """The paper technique as a first-class config flag on every family."""
+    cfg = reduced(C.get(name)).with_(
+        hashed=True, compression=0.25, hash_mode="element",
+        hash_panel_cols=0, hash_path="auto")
+    dense = reduced(C.get(name))
+    m = build(cfg)
+    md = build(dense)
+    params = m.init(KEY)
+    pdense = md.init(KEY)
+
+    def proj_count(p):
+        # compression applies to projection weights; embeddings/head are
+        # governed by hash_embeddings (off here)
+        return sum(x.size for k, x in
+                   jax.tree_util.tree_leaves_with_path(p)
+                   if "embed" not in str(k) and "lm_head" not in str(k))
+
+    n_hashed, n_dense = proj_count(params), proj_count(pdense)
+    assert n_hashed < 0.45 * n_dense, (n_hashed, n_dense)
+    batch = _batch(cfg)
+    loss, _ = jax.jit(m.train_loss)(params, batch)
+    assert np.isfinite(float(loss)) and float(loss) > 0.0
+    grads = jax.grad(lambda p: m.train_loss(p, batch)[0])(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0.0
+
+
+def test_decode_matches_full_forward_decoder():
+    """Teacher-forced decode must reproduce the training forward exactly
+    (GQA + RoPE + sliding-window cache correctness end-to-end).
+    fp32 so the comparison is numerically meaningful."""
+    cfg = reduced(C.get("gemma3-4b")).with_(dtype="float32")
+    m = build(cfg)
+    params = m.init(KEY)
+    seq = 12
+    batch = _batch(cfg, seq=seq)
+    # full forward logits via train path
+    x = batch["tokens"]
+    batch_pf = dict(batch)
+    batch_pf["tokens"] = x[:, :1]
+    batch_pf["cache"] = m.init_cache(B, seq + 2)
+    logits, cache = m.prefill(params, batch_pf)
+    outs = [logits]
+    for t in range(1, seq):
+        logits, cache = m.decode_step(params, x[:, t:t + 1], cache)
+        outs.append(logits)
+    dec_logits = jnp.concatenate(outs, axis=1)
+
+    # training-path logits (same tokens, no cache)
+    from repro.models.transformer import softmax_xent  # noqa
+    # reuse train_loss internals by re-running prefill with full tokens:
+    batch_full = dict(batch)
+    batch_full["cache"] = m.init_cache(B, seq + 2)
+    last, _ = m.prefill(params, batch_full)
+    np.testing.assert_allclose(
+        np.asarray(last[:, 0], np.float32),
+        np.asarray(dec_logits[:, -1], np.float32), rtol=2e-4, atol=2e-4)
+
+
+def test_pspecs_match_params():
+    for name in ["llama3-405b", "granite-moe-1b-a400m", "zamba2-2.7b",
+                 "rwkv6-7b", "whisper-medium"]:
+        cfg = reduced(C.get(name))
+        m = build(cfg)
+        params = jax.eval_shape(m.init, KEY)
+        specs = m.pspecs()
+        jax.tree.map(lambda p, s: None, params, specs,
+                     is_leaf=lambda x: hasattr(x, "shape"))  # same structure
+        pl = jax.tree.structure(params)
+        from jax.sharding import PartitionSpec as P
+        sl = jax.tree.structure(specs,
+                                is_leaf=lambda x: isinstance(x, P))
+        assert pl == sl, (name, pl, sl)

@@ -1,0 +1,233 @@
+"""Integration tests: training loop, checkpoint/restart/remesh,
+preemption recovery, serving engine, data pipeline determinism."""
+import json
+import os
+import signal
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.configs.base import ArchConfig
+from repro.configs.reduced import reduced
+from repro.data import lm_stream, mnist_synthetic, pipeline
+from repro.launch import mesh as mesh_lib
+from repro.launch.train import run
+from repro.models import build
+from repro.serving.engine import generate_batch
+from repro.train import checkpoint as ckpt_lib
+from repro.train import fault_tolerance as ft
+
+TINY = ArchConfig(
+    name="tiny-lm", family="dense", arch_kind="decoder",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, remat=False, dtype="float32")
+
+
+def test_train_loss_decreases(tmp_path):
+    mesh = mesh_lib.single_device_mesh()
+    out = run(TINY, mesh, steps=120, batch=16, seq=32, lr=3e-3,
+              ckpt_dir=str(tmp_path / "ck"), ckpt_every=1000, log_every=0)
+    first = np.mean(out["losses"][:10])
+    last = np.mean(out["losses"][-10:])
+    assert last < first - 0.1, (first, last)
+
+
+def test_hashed_train_loss_decreases():
+    mesh = mesh_lib.single_device_mesh()
+    cfg = TINY.hashed_variant(0.25).with_(hash_panel_cols=0)
+    out = run(cfg, mesh, steps=120, batch=16, seq=32, lr=3e-3,
+              ckpt_dir=None, log_every=0)
+    first = np.mean(out["losses"][:10])
+    last = np.mean(out["losses"][-10:])
+    assert last < first - 0.1, (first, last)
+
+
+def test_checkpoint_roundtrip_and_restart(tmp_path):
+    ck = str(tmp_path / "ck")
+    mesh = mesh_lib.single_device_mesh()
+    out1 = run(TINY, mesh, steps=8, batch=4, seq=16, ckpt_dir=ck,
+               ckpt_every=4, log_every=0)
+    assert ckpt_lib.latest_step(ck) == 8
+    # restart: resumes from step 8, trains to 12
+    out2 = run(TINY, mesh, steps=12, batch=4, seq=16, ckpt_dir=ck,
+               ckpt_every=100, log_every=0)
+    assert out2["final_step"] == 12
+    assert len(out2["losses"]) == 4          # only steps 8..11 run
+
+
+def test_checkpoint_atomicity_and_gc(tmp_path):
+    ck = str(tmp_path / "ck")
+    state = {"a": jnp.arange(8.0), "b": {"c": jnp.ones((3, 3))},
+             "step": jnp.asarray(5)}
+    for s in (1, 2, 3, 4):
+        ckpt_lib.save(state, ck, s, keep=2)
+    assert ckpt_lib.available_steps(ck) == [3, 4]
+    # a partial (uncommitted) dir must be ignored
+    os.makedirs(os.path.join(ck, "step_00000009"))
+    assert ckpt_lib.latest_step(ck) == 4
+    got = ckpt_lib.restore(ck, jax.tree.map(jnp.zeros_like, state))
+    np.testing.assert_allclose(np.asarray(got["a"]), np.arange(8.0))
+
+
+def test_checkpoint_elastic_remesh(tmp_path):
+    """Save under one mesh layout, restore under another (pod loss)."""
+    ck = str(tmp_path / "ck")
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    state = {"w": jnp.arange(64.0).reshape(8, 8)}
+    ckpt_lib.save(state, ck, 1)
+    mesh2 = mesh_lib.make_mesh((1, 1), ("data", "model"))
+    restored = ckpt_lib.restore(
+        ck, jax.eval_shape(lambda: state), mesh=mesh2,
+        pspecs={"w": P("data", "model")})
+    np.testing.assert_allclose(np.asarray(restored["w"]),
+                               np.arange(64.0).reshape(8, 8))
+    assert isinstance(restored["w"].sharding, NamedSharding)
+
+
+def test_preemption_guard_emergency_checkpoint(tmp_path):
+    """SIGTERM mid-run -> clean exit with a committed checkpoint."""
+    ck = str(tmp_path / "ck")
+    mesh = mesh_lib.single_device_mesh()
+
+    killer = threading.Timer(3.0, lambda: os.kill(os.getpid(),
+                                                  signal.SIGTERM))
+    killer.start()
+    out = run(TINY, mesh, steps=10000, batch=8, seq=32,
+              ckpt_dir=ck, ckpt_every=10 ** 9, log_every=0)
+    killer.cancel()
+    assert out["final_step"] < 10000            # stopped early
+    assert ckpt_lib.latest_step(ck) == out["final_step"]
+
+
+def test_run_with_restarts():
+    calls = []
+
+    def flaky(attempt):
+        calls.append(attempt)
+        if attempt < 2:
+            raise RuntimeError("node lost")
+        return 42
+
+    assert ft.run_with_restarts(flaky, max_restarts=3) == 42
+    assert calls == [0, 1, 2]
+
+
+def test_heartbeat_watchdog(tmp_path):
+    hb1 = ft.Heartbeat(str(tmp_path / "h1.json"), host_id=0)
+    hb2 = ft.Heartbeat(str(tmp_path / "h2.json"), host_id=1)
+    hb1.beat(5)
+    time.sleep(0.05)
+    stale = ft.watchdog([hb1, hb2], max_age_s=10.0)
+    assert stale == [1]                          # hb2 never beat
+    stale = ft.watchdog([hb1, hb2], max_age_s=0.01)
+    assert 0 in stale                            # hb1 now stale too
+
+
+def test_step_timer_straggler():
+    t = ft.StepTimer(straggler_factor=2.0, warmup=0)
+    for _ in range(6):
+        t.start()
+        time.sleep(0.01)
+        t.stop()
+    t.start()
+    time.sleep(0.08)
+    out = t.stop()
+    assert out["straggler"], out
+
+
+def test_lm_stream_deterministic_and_host_sharded():
+    a1 = next(lm_stream.batches(1, 4, 16, 100, host_id=0, num_hosts=2))
+    a2 = next(lm_stream.batches(1, 4, 16, 100, host_id=0, num_hosts=2))
+    b1 = next(lm_stream.batches(1, 4, 16, 100, host_id=1, num_hosts=2))
+    np.testing.assert_array_equal(a1["tokens"], a2["tokens"])
+    assert not np.array_equal(a1["tokens"], b1["tokens"])
+    # targets are next-token shifted
+    np.testing.assert_array_equal(a1["tokens"][:, 1:], a1["targets"][:, :-1])
+
+
+def test_lm_stream_learnable():
+    """The markov stream has far less entropy than uniform."""
+    seqs = lm_stream.markov_sequences(0, 64, 128, vocab=64)
+    # bigram conditional entropy estimate
+    from collections import Counter, defaultdict
+    ctx = defaultdict(Counter)
+    for row in seqs:
+        for t in range(2, len(row)):
+            ctx[(row[t - 2], row[t - 1])][row[t]] += 1
+    ents = []
+    for c, cnt in ctx.items():
+        tot = sum(cnt.values())
+        if tot >= 5:
+            p = np.array(list(cnt.values())) / tot
+            ents.append(-(p * np.log(p)).sum())
+    assert np.mean(ents) < 0.7 * np.log(64)
+
+
+def test_synthetic_datasets_shapes_and_determinism():
+    for ds in mnist_synthetic.DATASETS:
+        x, y = mnist_synthetic.load(ds, "train", n=64, seed=0)
+        x2, y2 = mnist_synthetic.load(ds, "train", n=64, seed=0)
+        np.testing.assert_array_equal(x, x2)
+        assert x.shape == (64, 784) and x.dtype == np.float32
+        assert x.min() >= 0.0 and x.max() <= 1.0
+        assert y.min() >= 0 and y.max() < mnist_synthetic.num_classes(ds)
+        # both classes/labels present
+        assert len(np.unique(y)) >= 2
+
+
+def test_prefetcher_orders_and_propagates_errors():
+    it = iter(range(10))
+    pf = pipeline.Prefetcher(it, place=lambda x: x * 2)
+    assert [next(pf) for _ in range(10)] == [0, 2, 4, 6, 8, 10, 12, 14,
+                                             16, 18]
+
+    def bad():
+        yield 1
+        raise ValueError("boom")
+
+    pf2 = pipeline.Prefetcher(bad(), place=lambda x: x)
+    assert next(pf2) == 1
+    with pytest.raises(ValueError):
+        next(pf2)
+        next(pf2)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "zamba2-2.7b", "rwkv6-7b"])
+def test_serving_engine_matches_sequential(arch):
+    cfg = reduced(C.get(arch)).with_(dtype="float32")
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    prompts = [np.arange(4) + 3, np.arange(7) + 1, np.arange(5) + 9]
+    outs = generate_batch(m, params, prompts, max_new_tokens=4,
+                          max_len=48, slots=2, eos_id=-1)
+
+    def single(prompt, n=4):
+        batch = {"tokens": jnp.asarray(prompt[None]),
+                 "cache": m.init_cache(1, 48)}
+        logits, cache = m.prefill(params, batch)
+        toks = [int(jnp.argmax(logits[0, -1]))]
+        for _ in range(n - 1):
+            logits, cache = m.decode_step(
+                params, jnp.asarray([[toks[-1]]], jnp.int32), cache)
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        return toks
+
+    for p, got in zip(prompts, outs):
+        assert single(np.asarray(p, np.int32)) == got
+
+
+@pytest.mark.parametrize("kind", ["hashed_space", "int8"])
+def test_train_with_grad_compression_converges(kind):
+    """Compressed-gradient training (error feedback) still reduces loss —
+    the cross-pod exchange path exercised end to end."""
+    mesh = mesh_lib.single_device_mesh()
+    out = run(TINY, mesh, steps=120, batch=16, seq=32, lr=3e-3,
+              log_every=0, grad_compressor=kind)
+    first = np.mean(out["losses"][:10])
+    last = np.mean(out["losses"][-10:])
+    assert last < first - 0.1, (kind, first, last)

@@ -1,0 +1,175 @@
+"""Property-based tests (hypothesis) for the paper's mathematical claims.
+
+- Eq. 4 == Eq. 5: weight sharing == feature hashing (exact, any shape).
+- Eq. 1: hashed inner products are unbiased (statistical, over seeds).
+- Eq. 12: autodiff dw == the paper's explicit scatter-sum formula.
+- Uniformity: bucket occupancy is approximately uniform.
+- Spec invariants: real_param_count ~= compression * virtual_size.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import HashedSpec, feature_hash, hashed, hashing, init
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@st.composite
+def specs(draw, max_dim=96):
+    rows = draw(st.integers(4, max_dim))
+    cols = draw(st.integers(4, max_dim))
+    comp = draw(st.sampled_from([1.0, 0.5, 0.25, 0.125, 1 / 16]))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    return HashedSpec((rows, cols), comp, mode="element", seed=seed)
+
+
+@given(spec=specs(), batch=st.integers(1, 5))
+@settings(**SETTINGS)
+def test_eq4_equals_eq5(spec, batch):
+    """z = x @ V  ==  w^T phi_i(x) for every output i (paper §4.3)."""
+    key = jax.random.PRNGKey(spec.seed % 1000)
+    w = init(key, spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, spec.rows))
+    z_ws = hashed.matmul(x, w, spec, path="materialize")       # Eq. 4
+    z_fh = feature_hash.matmul_via_feature_hashing(x, w, spec)  # Eq. 5
+    np.testing.assert_allclose(np.asarray(z_ws), np.asarray(z_fh),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(spec=specs())
+@settings(**SETTINGS)
+def test_eq12_gradient(spec):
+    """jax.grad dw == paper Eq. 12 explicit scatter-sum."""
+    key = jax.random.PRNGKey(3)
+    w = init(key, spec)
+    x = jax.random.normal(jax.random.PRNGKey(4), (3, spec.rows))
+    g = jax.random.normal(jax.random.PRNGKey(5), (3, spec.cols))
+
+    def loss(w):
+        return jnp.sum(hashed.matmul(x, w, spec, path="materialize") * g)
+
+    dw_auto = jax.grad(loss)(w)
+    # Eq. 12: dw_k = sum_{i,j: h(i,j)=k} xi(i,j) * (x^T g)[i, j]
+    gv = x.T @ g
+    i = jnp.arange(spec.rows)[:, None]
+    j = jnp.arange(spec.cols)[None, :]
+    idx, sgn = hashed.element_indices(spec, i, j)
+    dw_explicit = jnp.zeros((spec.num_buckets,)).at[idx.ravel()].add(
+        (gv * sgn).ravel())
+    np.testing.assert_allclose(np.asarray(dw_auto),
+                               np.asarray(dw_explicit), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_eq1_unbiased_inner_product():
+    """E_phi[phi(x)^T phi(x')] == x^T x' over random hash seeds (Eq. 1)."""
+    rng = np.random.default_rng(0)
+    d, k = 64, 16
+    x = rng.standard_normal(d).astype(np.float32)
+    xp = rng.standard_normal(d).astype(np.float32)
+    true = float(x @ xp)
+    vals = []
+    for seed in range(400):
+        idx, sgn = feature_hash.index_map(d, k, seed)
+        phi_x = np.zeros(k, np.float32)
+        phi_xp = np.zeros(k, np.float32)
+        np.add.at(phi_x, np.asarray(idx), np.asarray(sgn) * x)
+        np.add.at(phi_xp, np.asarray(idx), np.asarray(sgn) * xp)
+        vals.append(float(phi_x @ phi_xp))
+    est = np.mean(vals)
+    se = np.std(vals) / np.sqrt(len(vals))
+    assert abs(est - true) < 4 * se + 1e-3, (est, true, se)
+
+
+def test_bucket_uniformity():
+    """h is approximately uniform: chi-square over buckets within 5x the
+    99.9% quantile for a few (shape, seed) combos."""
+    for seed in (0, 7, 12345):
+        spec = HashedSpec((256, 256), 0.125, mode="element", seed=seed)
+        i = jnp.arange(256)[:, None]
+        j = jnp.arange(256)[None, :]
+        idx, _ = hashed.element_indices(spec, i, j)
+        counts = np.bincount(np.asarray(idx).ravel(),
+                             minlength=spec.num_buckets)
+        expected = 256 * 256 / spec.num_buckets
+        chi2 = float(((counts - expected) ** 2 / expected).sum())
+        # dof ~ num_buckets; loose bound (5x) to keep the test stable
+        assert chi2 < 5 * spec.num_buckets, (seed, chi2, spec.num_buckets)
+
+
+def test_sign_hash_balanced():
+    i = jnp.arange(512)[:, None]
+    j = jnp.arange(512)[None, :]
+    sgn = hashing.sign_hash(i, j, 9)
+    frac = float(jnp.mean((sgn > 0).astype(jnp.float32)))
+    assert 0.49 < frac < 0.51, frac
+
+
+@given(spec=specs())
+@settings(**SETTINGS)
+def test_param_budget(spec):
+    got = spec.real_param_count()
+    want = spec.compression * spec.virtual_size
+    assert got <= max(want * 1.05, spec.n_panels), (got, want)
+    assert got >= want * 0.5
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_derive_seed_deterministic_and_mixing(a, b):
+    s1 = hashing.derive_seed(a, b)
+    s2 = hashing.derive_seed(a, b)
+    assert s1 == s2
+    assert 0 <= s1 < 2 ** 32
+    if a != b:
+        assert hashing.derive_seed(a, b) != hashing.derive_seed(b, a) or a == b
+
+
+def test_grad_compression_sketch_unbiased():
+    """Hashed-space gradient sketch: EF residual decays the error; the
+    sketch roundtrip is unbiased over seeds."""
+    from repro.train import grad_compress as gc
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal(512).astype(np.float32))
+    approx = []
+    for seed in range(200):
+        spec = gc.SketchSpec(512, 64, seed)
+        G = gc.sketch_compress(g, spec)
+        approx.append(np.asarray(gc.sketch_decompress(G, spec, g.shape)))
+    est = np.mean(approx, axis=0)
+    err = np.abs(est - np.asarray(g)).mean()
+    assert err < 0.35, err  # collisions add variance, not bias
+
+
+def test_grad_compression_error_feedback_converges():
+    """With error feedback, the ACCUMULATED compressed updates track the
+    accumulated true gradient (the sketched-SGD guarantee)."""
+    from repro.train import grad_compress as gc
+    rng = np.random.default_rng(2)
+    residual = jnp.zeros((256,), jnp.float32)
+    total_true = np.zeros(256)
+    total_sent = np.zeros(256)
+    for step in range(50):
+        g = jnp.asarray(rng.standard_normal(256).astype(np.float32))
+        sent, residual = gc.sketch_roundtrip(g, residual, 0.25, seed=11)
+        total_true += np.asarray(g)
+        total_sent += np.asarray(sent)
+    # residual bounds the gap
+    gap = np.abs(total_true - total_sent).max()
+    res = float(jnp.abs(residual).max())
+    assert gap <= res + 1e-3, (gap, res)
+
+
+def test_int8_roundtrip_error_feedback():
+    from repro.train import grad_compress as gc
+    rng = np.random.default_rng(3)
+    g = jnp.asarray(rng.standard_normal((64, 64)).astype(np.float32))
+    r = jnp.zeros_like(g)
+    approx, r2 = gc.int8_roundtrip(g, r)
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.abs(approx - g).max()) <= scale * 0.5 + 1e-6
+    np.testing.assert_allclose(np.asarray(approx + r2), np.asarray(g),
+                               rtol=1e-5, atol=1e-5)
