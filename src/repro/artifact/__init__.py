@@ -1,0 +1,54 @@
+"""Compressed model artifacts (the paper's storage claim, deployable).
+
+A HashedNet is fully described by its real parameter banks plus hash
+seeds; the virtual weights are recomputed at load with no additional
+memory overhead (Chen et al., 2015).  This package turns that into a
+serving-grade pipeline:
+
+- :mod:`repro.artifact.format`   — single-file mmap-able container
+- :mod:`repro.artifact.quant`    — int8/fp8 bank quantization (per-group)
+- :mod:`repro.artifact.io`       — zero-copy cold-start loading
+- :mod:`repro.artifact.report`   — paper-style compression tables
+- :mod:`repro.artifact.registry` — versioned name -> artifact resolution
+
+Typical flow::
+
+    from repro import artifact
+    header = artifact.export_model("m.hnart", cfg, params, quant="int8")
+    print(artifact.report.report("m.hnart"))
+    cfg, model, params = artifact.load_model("m.hnart")
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.artifact import format, io, quant, registry, report  # noqa: F401
+from repro.artifact.io import load, load_model, open_artifact  # noqa: F401
+
+
+def export_model(path: str, cfg, params, *, quant: Optional[str] = None,
+                 group: Optional[int] = None, meta: Optional[dict] = None
+                 ) -> dict:
+    """Serialize a built model's params into a compressed artifact.
+
+    quant/group default to the config's artifact knobs
+    (cfg.artifact_quant / cfg.artifact_group).  Returns the header.
+    """
+    from repro.artifact import format as F
+    from repro.models.transformer import bank_spec_map
+
+    scheme = getattr(cfg, "artifact_quant", "none") if quant is None \
+        else quant
+    grp = getattr(cfg, "artifact_group", 64) if group is None else group
+    return F.write(path, params, config=F.config_to_dict(cfg),
+                   bank_specs=bank_spec_map(cfg), quant=scheme,
+                   quant_group=grp, meta=meta)
+
+
+def export_tree(path: str, params, *, bank_specs=None, quant: str = "none",
+                group: int = 64, meta: Optional[dict] = None) -> dict:
+    """Serialize an arbitrary pytree (e.g. a paper-MLP parameter list)
+    without an ArchConfig; pass bank_specs for hashed-bank accounting."""
+    from repro.artifact import format as F
+    return F.write(path, params, config=None, bank_specs=bank_specs,
+                   quant=quant, quant_group=group, meta=meta)

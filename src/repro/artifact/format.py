@@ -1,0 +1,238 @@
+"""Single-file compressed model artifact: JSON header + aligned sections.
+
+Layout (little-endian)::
+
+    bytes 0..8    magic  b"HNETART1"
+    bytes 8..16   u64 header length H
+    bytes 16..16+H JSON header (utf-8)
+    pad to 64-byte boundary
+    section data  (each section 64-byte aligned)
+
+The header carries everything needed to rebuild the model with *no other
+inputs*: the ArchConfig dict, and per leaf its tree path, stored dtype,
+shape, section offset, the serialized :class:`~repro.core.hashed.HashedSpec`
+for hashed banks (paper: bank + hash seeds fully determine the virtual
+matrix), and quantization metadata (scheme / group / scales section) when
+the leaf was quantized at export.
+
+This is what the paper's storage claim looks like as a deployable file:
+dense leaves are stored as-is, hashed layers store only the ``c x`` smaller
+bank — the virtual weights are *recomputed* from the hash at load, never
+stored.  Alignment makes every section directly mmap-able into a typed
+numpy view (zero-copy cold start, repro.artifact.io).
+
+Tree paths are JSON lists whose entries are dict keys (strings) or list
+indices (integers) — enough to reconstruct the nested dict/list pytrees
+used by both the transformer stacks and the paper MLPs without needing a
+treedef from a live model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import struct
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.artifact import quant as Q
+from repro.core import hashed as H
+
+MAGIC = b"HNETART1"
+ALIGN = 64
+FORMAT_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> (path, leaf) lists
+# ---------------------------------------------------------------------------
+
+def _path_parts(key_path) -> Tuple:
+    parts: List[Any] = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(int(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:  # pragma: no cover - future jax key kinds
+            parts.append(str(k))
+    return tuple(parts)
+
+
+def flatten_with_paths(tree) -> List[Tuple[Tuple, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_path_parts(kp), leaf) for kp, leaf in flat]
+
+
+def unflatten_from_paths(entries: List[Tuple[Tuple, Any]]):
+    """Rebuild a nested dict/list pytree from (path, value) pairs."""
+    if not entries:
+        return {}
+    if len(entries) == 1 and entries[0][0] == ():
+        return entries[0][1]
+    root: Dict = {}
+    for path, value in entries:
+        node = root
+        for part in path[:-1]:
+            node = node.setdefault(part, {})
+        node[path[-1]] = value
+
+    def finalize(node):
+        if not isinstance(node, dict):
+            return node
+        out = {k: finalize(v) for k, v in node.items()}
+        if out and all(isinstance(k, int) for k in out):
+            idxs = sorted(out)
+            if idxs == list(range(len(idxs))):
+                return [out[i] for i in idxs]
+        return out
+
+    return finalize(root)
+
+
+# ---------------------------------------------------------------------------
+# config serialization
+# ---------------------------------------------------------------------------
+
+def config_to_dict(cfg) -> dict:
+    d = dataclasses.asdict(cfg)
+    d["hash_block"] = list(d["hash_block"])
+    return d
+
+
+def config_from_dict(d: dict):
+    from repro.configs.base import ArchConfig
+    kw = dict(d)
+    kw["hash_block"] = tuple(kw.get("hash_block", (128, 128)))
+    fields = {f.name for f in dataclasses.fields(ArchConfig)}
+    # forward-compat: ignore unknown keys from newer writers
+    kw = {k: v for k, v in kw.items() if k in fields}
+    return ArchConfig(**kw)
+
+
+# ---------------------------------------------------------------------------
+# write
+# ---------------------------------------------------------------------------
+
+def _aligned(n: int) -> int:
+    return (n + ALIGN - 1) // ALIGN * ALIGN
+
+
+def write(path: str, params, *, config: Optional[dict] = None,
+          bank_specs: Optional[Dict[Tuple, H.HashedSpec]] = None,
+          quant: str = "none", quant_group: int = 64,
+          quant_min_size: int = 4096,
+          meta: Optional[dict] = None) -> dict:
+    """Serialize ``params`` into one artifact file; returns the header.
+
+    bank_specs: leaf path tuple -> HashedSpec for hashed banks (layer
+    stacking may add leading array axes; the leaf then holds ``stack``
+    independent banks and its element count is a multiple of
+    ``spec.real_param_count()``).
+    """
+    if quant not in Q.SCHEMES:
+        raise ValueError(f"quant must be one of {Q.SCHEMES}")
+    bank_specs = bank_specs or {}
+    entries = flatten_with_paths(params)
+
+    leaves = []
+    blobs: List[bytes] = []
+    offset = 0
+
+    def add_section(data: bytes) -> Tuple[int, int]:
+        nonlocal offset
+        start = offset
+        blobs.append(data)
+        offset = _aligned(start + len(data))
+        blobs.append(b"\x00" * (offset - start - len(data)))
+        return start, len(data)
+
+    for p, leaf in entries:
+        arr = np.asarray(jax.device_get(leaf))
+        spec = bank_specs.get(p)
+        kind = "bank" if spec is not None else "dense"
+        entry: Dict[str, Any] = {
+            "path": list(p), "kind": kind,
+            "shape": [int(s) for s in arr.shape],
+            "dtype": str(arr.dtype),
+            "spec": spec.to_dict() if spec is not None else None,
+        }
+        if spec is not None:
+            rp = spec.real_param_count()
+            if arr.size % rp:
+                raise ValueError(
+                    f"leaf {p}: size {arr.size} is not a multiple of the "
+                    f"spec's real_param_count {rp} — bank_specs mismatch")
+            entry["stack"] = int(arr.size // rp)
+        if quant != "none" and Q.should_quantize(p, arr, spec is not None,
+                                                min_size=quant_min_size):
+            z = Q.quantize(arr, quant, quant_group)
+            qoff, qn = add_section(z.q.tobytes())
+            soff, sn = add_section(z.scales.tobytes())
+            entry.update({
+                "offset": qoff, "nbytes": qn,
+                "stored_dtype": str(Q.stored_dtype(quant)),
+                "quant": {"scheme": z.scheme, "group": z.group,
+                          "pad": z.pad, "num_groups": int(z.scales.size),
+                          "scales_offset": soff, "scales_nbytes": sn},
+            })
+        else:
+            doff, dn = add_section(arr.tobytes())
+            entry.update({"offset": doff, "nbytes": dn,
+                          "stored_dtype": str(arr.dtype), "quant": None})
+        leaves.append(entry)
+
+    header = {
+        "format": "hashednet-artifact",
+        "version": FORMAT_VERSION,
+        "alignment": ALIGN,
+        "config": config,
+        "quant": quant,
+        "leaves": leaves,
+        "meta": meta or {},
+    }
+    hjson = json.dumps(header, separators=(",", ":")).encode("utf-8")
+    preamble = MAGIC + struct.pack("<Q", len(hjson)) + hjson
+    data_start = _aligned(len(preamble))
+    header["data_start"] = data_start
+    # re-encode with data_start included (length may grow; re-align)
+    for _ in range(3):
+        hjson = json.dumps(header, separators=(",", ":")).encode("utf-8")
+        new_start = _aligned(len(MAGIC) + 8 + len(hjson))
+        if new_start == header["data_start"]:
+            break
+        header["data_start"] = new_start
+    preamble = MAGIC + struct.pack("<Q", len(hjson)) + hjson
+    pad = header["data_start"] - len(preamble)
+
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(preamble)
+        f.write(b"\x00" * pad)
+        for b in blobs:
+            f.write(b)
+    os.replace(tmp, path)          # atomic visibility, same as checkpoints
+    return header
+
+
+# ---------------------------------------------------------------------------
+# read
+# ---------------------------------------------------------------------------
+
+def read_header(path: str) -> dict:
+    with open(path, "rb") as f:
+        magic = f.read(len(MAGIC))
+        if magic != MAGIC:
+            raise ValueError(f"{path}: not a hashednet artifact "
+                             f"(magic {magic!r})")
+        (hlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hlen).decode("utf-8"))
+    if header.get("version", 0) > FORMAT_VERSION:
+        raise ValueError(f"{path}: artifact version {header['version']} "
+                         f"is newer than this reader ({FORMAT_VERSION})")
+    return header

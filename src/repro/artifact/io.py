@@ -1,0 +1,97 @@
+"""Cold-start loading: mmap the artifact, view sections, device_put.
+
+The artifact's sections are 64-byte aligned typed blobs, so loading is::
+
+    mm   = np.memmap(path, np.uint8, "r")           # no read, just map
+    leaf = mm[off:off+n].view(dtype).reshape(shape) # zero-copy view
+    jax.device_put(leaf)                            # one H2D copy
+
+No model ``init`` runs, no treedef is needed from a live model (paths in
+the header rebuild the pytree), and nothing is ever materialized for the
+virtual matrices — the HashedSpecs ride along in the header and the model
+decompresses on the fly, which is exactly the paper's "no additional
+memory overhead" load story.
+
+Quantized leaves are dequantized on the host by default (one pass, then a
+single H2D copy of the restored dtype).  ``dequant=False`` instead returns
+:class:`repro.artifact.quant.Quantized` leaves so a quantized-kernel
+consumer (e.g. a future int8 Pallas decompress-GEMM) can ship the codes to
+the device untouched.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.artifact import format as F
+from repro.artifact import quant as Q
+
+
+def open_artifact(path: str) -> Tuple[dict, np.memmap]:
+    header = F.read_header(path)
+    mm = np.memmap(path, dtype=np.uint8, mode="r")
+    return header, mm
+
+
+def _view(mm: np.memmap, data_start: int, offset: int, nbytes: int,
+          dtype: str, shape) -> np.ndarray:
+    start = data_start + offset
+    raw = mm[start:start + nbytes]
+    return raw.view(Q.np_dtype(dtype)).reshape(shape)
+
+
+def read_leaf(header: dict, mm: np.memmap, entry: dict,
+              dequant: bool = True):
+    ds = header["data_start"]
+    z = entry.get("quant")
+    if z is None:
+        return _view(mm, ds, entry["offset"], entry["nbytes"],
+                     entry["stored_dtype"], entry["shape"])
+    q = _view(mm, ds, entry["offset"], entry["nbytes"],
+              entry["stored_dtype"], (z["num_groups"], z["group"]))
+    scales = _view(mm, ds, z["scales_offset"], z["scales_nbytes"],
+                   "float32", (z["num_groups"],))
+    zq = Q.Quantized(q=q, scales=scales, scheme=z["scheme"],
+                     group=z["group"], pad=z["pad"],
+                     orig_shape=tuple(entry["shape"]),
+                     orig_dtype=entry["dtype"])
+    return zq.dequantize() if dequant else zq
+
+
+def load(path: str, *, dequant: bool = True, as_jax: bool = True,
+         device: Optional[Any] = None) -> Tuple[dict, Any]:
+    """Load an artifact -> (header, params pytree).
+
+    as_jax: device_put every array leaf (the cold-start path).  With
+    as_jax=False leaves stay numpy views into the mmap — near-free, used
+    for inspection/reporting.
+    """
+    import jax
+
+    header, mm = open_artifact(path)
+    entries = []
+    for e in header["leaves"]:
+        leaf = read_leaf(header, mm, e, dequant=dequant)
+        if as_jax and not isinstance(leaf, Q.Quantized):
+            leaf = jax.device_put(leaf, device)
+        entries.append((tuple(e["path"]), leaf))
+    return header, F.unflatten_from_paths(entries)
+
+
+def load_model(path: str, *, dequant: bool = True,
+               device: Optional[Any] = None):
+    """Artifact -> (cfg, model, params): the one-call cold start.
+
+    The model is rebuilt from the stored ArchConfig; params land directly
+    on the device.  First prefill/decode compile happens lazily in the
+    engine, as with a live-trained model.
+    """
+    from repro.models import build
+
+    header, params = load(path, dequant=dequant, device=device)
+    if not header.get("config"):
+        raise ValueError(f"{path}: artifact has no model config; "
+                         f"use artifact.io.load for raw param trees")
+    cfg = F.config_from_dict(header["config"])
+    return cfg, build(cfg), params

@@ -57,6 +57,9 @@ class ArchConfig:
     hash_block: Tuple[int, int] = (128, 128)
     hash_embeddings: bool = False
     hash_path: str = "scan"          # execution path for hashed matmuls
+    # compressed artifact export (repro.artifact)
+    artifact_quant: str = "none"     # none | int8 | fp8 bank quantization
+    artifact_group: int = 64         # per-group scale granularity
     # numerics / train
     dtype: str = "bfloat16"
     remat: bool = True

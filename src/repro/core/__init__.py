@@ -1,5 +1,7 @@
 """HashedNets core: stateless hashed weight sharing (Chen et al., ICML 2015)."""
-from repro.core.hashed import HashedSpec, init, materialize, materialize_rows, matmul
+from repro.core.hashed import (HashedSpec, init, materialize,
+                               materialize_rows, matmul, spec_from_dict,
+                               spec_to_dict)
 from repro.core import hashing, feature_hash
 
 __all__ = [
@@ -8,6 +10,8 @@ __all__ = [
     "materialize",
     "materialize_rows",
     "matmul",
+    "spec_to_dict",
+    "spec_from_dict",
     "hashing",
     "feature_hash",
 ]

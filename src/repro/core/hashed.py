@@ -115,11 +115,48 @@ class HashedSpec:
             raise ValueError("compression must be in (0, 1]")
         if self.mode == "block":
             bm, bn = self.block_shape
-            if self.rows % bm or self.cols % bn:
-                raise ValueError(
-                    f"block_shape {self.block_shape} must divide "
-                    f"virtual_shape {self.virtual_shape}"
-                )
+            if bm <= 0 or bn <= 0:
+                raise ValueError(f"bad block_shape {self.block_shape}")
+            # Non-divisible virtual shapes are allowed: the tile grid is
+            # ceil-sized and every consumer slices back to (rows, cols).
+            # Only the fused Pallas kernel requires exact divisibility
+            # (checked in repro.kernels.ops at dispatch).
+
+    # ---- serialization (artifact header / registry metadata) -----------
+    def to_dict(self) -> dict:
+        """JSON-safe description; exact inverse of :func:`spec_from_dict`.
+
+        Everything needed to regenerate the virtual matrix from the bank
+        alone — this is what the paper's storage claim rests on: the hash
+        is stateless, so an artifact stores only these few scalars + the
+        real parameters."""
+        return {
+            "virtual_shape": [int(x) for x in self.virtual_shape],
+            "compression": float(self.compression),
+            "mode": self.mode,
+            "seed": int(self.seed),
+            "panel_cols": int(self.panel_cols),
+            "block_shape": [int(x) for x in self.block_shape],
+            "use_sign": bool(self.use_sign),
+        }
+
+
+def spec_to_dict(spec: HashedSpec) -> dict:
+    return spec.to_dict()
+
+
+def spec_from_dict(d: dict) -> HashedSpec:
+    spec = HashedSpec(
+        virtual_shape=tuple(int(x) for x in d["virtual_shape"]),
+        compression=float(d["compression"]),
+        mode=str(d["mode"]),
+        seed=int(d["seed"]),
+        panel_cols=int(d.get("panel_cols", 0)),
+        block_shape=tuple(int(x) for x in d.get("block_shape", (128, 128))),
+        use_sign=bool(d.get("use_sign", True)),
+    )
+    spec.validate()
+    return spec
 
 
 # ---------------------------------------------------------------------------
@@ -292,6 +329,11 @@ def matmul_scan(x, w, spec: HashedSpec, panel_cols: int = 0, dtype=None,
         bm, bn = spec.block_shape
         gi, gj = spec.tile_grid
         idx, sgn = block_indices(spec)                  # (gi, gj)
+        rpad = gi * bm - spec.rows
+        if rpad:
+            # ragged tile grid: zero-pad the contraction dim (zero rows of
+            # x contribute nothing against the padded virtual rows)
+            x2 = jnp.pad(x2, ((0, 0), (0, rpad)))
         xt = x2.reshape(x2.shape[0], gi, bm)
 
         def body(carry, args):

@@ -44,6 +44,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import hashed, hashing
 
+# pallas renamed TPUCompilerParams -> CompilerParams across jax releases;
+# accept either so the kernels run on the pinned container jax.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 # ---------------------------------------------------------------------------
 # element-mode forward / transpose-forward
 # ---------------------------------------------------------------------------
@@ -140,7 +145,7 @@ def element_matmul(x, w, spec: hashed.HashedSpec, *, block=(128, 128, 128),
         out_specs=pl.BlockSpec((bm, bn), lambda mi, ci, ki: (mi, ci)),
         out_shape=jax.ShapeDtypeStruct((m, c), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -217,7 +222,7 @@ def element_dw(x, g, spec: hashed.HashedSpec, *, block=(128, 128, 128),
         out_specs=pl.BlockSpec((kp,), lambda ci, ki, mi: ((ci * bn) // panel_cols,)),
         out_shape=jax.ShapeDtypeStruct((spec.num_buckets,), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bk, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary"),
         ),
         interpret=interpret,
@@ -303,7 +308,7 @@ def block_matmul(x, w, spec: hashed.HashedSpec, *, bm: int = 128,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, nc * bn), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -392,7 +397,7 @@ def block_dw(x, g, spec: hashed.HashedSpec, *, bm: int = 128,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((spec.bank_tiles, brow, bcol),
                                        jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"),
         ),
         interpret=interpret,

@@ -106,6 +106,13 @@ def hashed_matmul(x, w, spec: hashed.HashedSpec, dtype=None,
                   interpret=None, block=(128, 128, 128)):
     """y = x @ decompress(w, spec), fused Pallas kernel, differentiable."""
     spec.validate()
+    if spec.mode == "block":
+        bm_, bn_ = spec.block_shape
+        if spec.rows % bm_ or spec.cols % bn_:
+            raise ValueError(
+                f"pallas block path needs block_shape {spec.block_shape} to "
+                f"divide virtual_shape {spec.virtual_shape}; use the scan or "
+                f"materialize path for ragged grids")
     dtype = dtype or x.dtype
     if interpret is None:
         interpret = not _on_tpu()

@@ -47,6 +47,10 @@ def hashed_dw_ref(x, g, spec: hashed.HashedSpec, dtype=jnp.float32):
     bm, bn = spec.block_shape
     gi, gj = spec.tile_grid
     idx, sgn = hashed.block_indices(spec)
+    rpad, cpad = gi * bm - spec.rows, gj * bn - spec.cols
+    if rpad or cpad:
+        # ragged tile grid: cotangent is zero over the padded region
+        gv = jnp.pad(gv, ((0, rpad), (0, cpad)))
     tiles = gv.reshape(gi, bm, gj, bn).transpose(0, 2, 1, 3)  # (gi,gj,bm,bn)
     tiles = tiles * sgn[..., None, None].astype(jnp.float32)
     out = jnp.zeros((spec.bank_tiles, bm, bn), jnp.float32)

@@ -156,6 +156,10 @@ def analyze(compiled, cfg, cell, chips: int,
     from repro.launch import hlo_analysis
 
     ca = compiled.cost_analysis() or {}
+    # jax API drift: cost_analysis() returns [dict] on older releases
+    # (one entry per executable) and a flat dict on newer ones.
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
     hlo_text = hlo_text if hlo_text is not None else compiled.as_text()
     h = hlo_analysis.analyze_text(hlo_text)
     flops = h["flops"]

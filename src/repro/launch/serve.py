@@ -4,8 +4,17 @@ engine (repro.serving.engine).
     python -m repro.launch.serve --arch qwen3-1.7b --reduced \
         --requests 8 --max-new 16
 
-Loads params from --ckpt-dir if present (a trained model), else random
-init.  Prints per-request generations + aggregate throughput.
+Three cold-start sources, in priority order:
+
+- --artifact <file.hnart>: compressed model artifact (config + hash
+  seeds + banks in one mmap-able file; repro.artifact) — the production
+  path: no checkpoint, no live config flags needed.
+- --model-name <name[@version]> --registry <root>: resolve the artifact
+  through the versioned registry (sha256-verified).
+- --arch [--ckpt-dir]: build from config; load the generic training
+  checkpoint if present, else random init.
+
+Prints per-request generations + aggregate throughput.
 """
 from __future__ import annotations
 
@@ -25,35 +34,73 @@ from repro.train import checkpoint as ckpt_lib
 
 def main() -> int:
     p = argparse.ArgumentParser()
-    p.add_argument("--arch", required=True, choices=C.names())
+    p.add_argument("--arch", default=None, choices=C.names())
     p.add_argument("--reduced", action="store_true")
     p.add_argument("--hashed", action="store_true")
-    p.add_argument("--compression", type=float, default=0.125)
+    p.add_argument("--compression", type=float, default=None,
+                   help="hashed compression ratio (default 0.125)")
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--max-len", type=int, default=256)
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--ckpt-dir", default=None)
+    p.add_argument("--artifact", default=None,
+                   help="serve from a compressed model artifact file")
+    p.add_argument("--model-name", default=None,
+                   help="registered model name[@version] (with --registry)")
+    p.add_argument("--registry", default=None,
+                   help="model registry root for --model-name")
     args = p.parse_args()
 
-    cfg = C.get(args.arch)
-    if args.reduced:
-        cfg = reduce_cfg(cfg)
-    if args.hashed:
-        cfg = cfg.hashed_variant(args.compression)
-    model = build(cfg)
+    if args.artifact and args.model_name:
+        p.error("--artifact and --model-name are mutually exclusive")
+    if args.artifact and args.registry:
+        p.error("--registry goes with --model-name; a direct --artifact "
+                "path bypasses registry integrity checks")
+    if args.model_name and not args.registry:
+        p.error("--model-name requires --registry")
+    if args.artifact or args.model_name:
+        # the artifact IS the model: config flags / checkpoints would be
+        # silently ignored, so reject the incoherent combination
+        ignored = [flag for flag, on in [
+            ("--arch", args.arch), ("--ckpt-dir", args.ckpt_dir),
+            ("--hashed", args.hashed), ("--reduced", args.reduced),
+            ("--compression", args.compression is not None)] if on]
+        if ignored:
+            p.error(f"{'/'.join(ignored)} cannot be combined with an "
+                    f"artifact source (the artifact carries its own "
+                    f"config and weights)")
+        t_load = time.time()
+        eng = Engine.from_artifact(
+            args.artifact or args.model_name,
+            registry_root=args.registry if args.model_name else None,
+            slots=args.slots, max_len=args.max_len, eos_id=-1)
+        cfg = eng.model.cfg
+        print(f"cold start from artifact: {cfg.name} "
+              f"({time.time() - t_load:.2f}s to params-on-device)")
+    else:
+        if not args.arch:
+            p.error("--arch is required without --artifact/--model-name")
+        cfg = C.get(args.arch)
+        if args.reduced:
+            cfg = reduce_cfg(cfg)
+        if args.hashed:
+            cfg = cfg.hashed_variant(args.compression
+                                     if args.compression is not None
+                                     else 0.125)
+        model = build(cfg)
 
-    params = model.init(jax.random.PRNGKey(0))
-    if args.ckpt_dir and ckpt_lib.latest_step(args.ckpt_dir) is not None:
-        state = ckpt_lib.restore(args.ckpt_dir,
-                                 {"params": params, "opt": None, "step": 0})
-        params = state["params"]
-        print(f"loaded params from {args.ckpt_dir}")
+        params = model.init(jax.random.PRNGKey(0))
+        if args.ckpt_dir and ckpt_lib.latest_step(args.ckpt_dir) is not None:
+            state = ckpt_lib.restore(
+                args.ckpt_dir, {"params": params, "opt": None, "step": 0})
+            params = state["params"]
+            print(f"loaded params from {args.ckpt_dir}")
+        eng = Engine(model, params, slots=args.slots, max_len=args.max_len,
+                     eos_id=-1)
 
     rng = np.random.default_rng(0)
-    eng = Engine(model, params, slots=args.slots, max_len=args.max_len,
-                 eos_id=-1)
     t0 = time.time()
     for uid in range(args.requests):
         plen = int(rng.integers(4, 24))

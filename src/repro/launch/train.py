@@ -89,7 +89,9 @@ def run(cfg, mesh, *, steps: int, batch: int, seq: int,
         ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
         num_microbatches: int = 1, log_every: int = 10,
         heartbeat_path: Optional[str] = None,
-        lr: float = 3e-4, grad_compressor: Optional[str] = None
+        lr: float = 3e-4, grad_compressor: Optional[str] = None,
+        artifact_dir: Optional[str] = None,
+        registry_root: Optional[str] = None
         ) -> Dict[str, Any]:
     model, train_step, init_state, state_specs, state_sh = build_runner(
         cfg, mesh, num_microbatches=num_microbatches, lr=lr,
@@ -113,6 +115,11 @@ def run(cfg, mesh, *, steps: int, batch: int, seq: int,
         print(f"restored checkpoint @ step {start_step}", flush=True)
     if state is None:
         state = init_state()
+
+    export_hook = None
+    if artifact_dir:
+        export_hook = ckpt_lib.artifact_exporter(
+            cfg, artifact_dir, registry_root=registry_root)
 
     hb = ft.Heartbeat(heartbeat_path or
                       os.path.join(ckpt_dir or "/tmp", "heartbeat.json"),
@@ -145,7 +152,8 @@ def run(cfg, mesh, *, steps: int, batch: int, seq: int,
                     (step_i + 1) % ckpt_every == 0 or guard.should_stop
                     or step_i + 1 == steps)
                 if want_ckpt:
-                    ckpt_lib.save(state, ckpt_dir, step_i + 1)
+                    ckpt_lib.save(state, ckpt_dir, step_i + 1,
+                                  on_save=export_hook)
                 if guard.should_stop:
                     print("preemption: emergency checkpoint saved, "
                           "exiting cleanly", flush=True)
@@ -177,13 +185,30 @@ def main() -> int:
     p.add_argument("--grad-compress", default=None,
                    choices=[None, "hashed_space", "int8"],
                    help="cross-pod gradient compression (error feedback)")
+    p.add_argument("--artifact-dir", default=None,
+                   help="export a compressed model artifact alongside "
+                        "every committed checkpoint")
+    p.add_argument("--artifact-quant", default="none",
+                   choices=["none", "int8", "fp8"],
+                   help="bank quantization for exported artifacts")
+    p.add_argument("--registry", default=None,
+                   help="model registry root; exported artifacts are "
+                        "registered under the config name")
     args = p.parse_args()
+    if (args.artifact_quant != "none" or args.registry) \
+            and not args.artifact_dir:
+        p.error("--artifact-quant/--registry require --artifact-dir")
+    if args.artifact_dir and not args.ckpt_dir:
+        p.error("--artifact-dir requires --ckpt-dir (artifacts are "
+                "exported at checkpoint commits)")
 
     cfg = C.get(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
     if args.hashed:
         cfg = cfg.hashed_variant(args.compression)
+    if args.artifact_quant != "none":
+        cfg = cfg.with_(artifact_quant=args.artifact_quant)
 
     sizes = tuple(int(x) for x in args.mesh.split(","))
     axes = ("pod", "data", "model")[-len(sizes):]
@@ -192,7 +217,8 @@ def main() -> int:
     out = run(cfg, mesh, steps=args.steps, batch=args.batch, seq=args.seq,
               ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
               num_microbatches=args.microbatches, lr=args.lr,
-              grad_compressor=args.grad_compress)
+              grad_compressor=args.grad_compress,
+              artifact_dir=args.artifact_dir, registry_root=args.registry)
     print(json.dumps({k: v for k, v in out.items() if k != "losses"}))
     print(f"loss: first={out['losses'][0]:.4f} last={out['losses'][-1]:.4f}")
     return 0

@@ -95,6 +95,79 @@ def _hspec(cfg: ArchConfig, slot: str, vshape) -> Optional[H.HashedSpec]:
     )
 
 
+def bank_spec_map(cfg: ArchConfig) -> Dict[tuple, H.HashedSpec]:
+    """Map param-leaf paths -> HashedSpec for every hashed bank in a model.
+
+    Keys are the nested-dict key tuples of ``model.init`` params (layer
+    stacking adds a leading array axis, never a path component).  This is
+    the ground truth the artifact subsystem serializes: bank leaves carry
+    their spec in the header so the virtual matrix is reconstructible from
+    the file alone.  Kept next to the plan factories so a new projection
+    slot can't silently miss the map.
+    """
+    out: Dict[tuple, H.HashedSpec] = {}
+    if not cfg.hashed:
+        return out
+
+    def add(base: tuple, **named_specs):
+        for name, spec in named_specs.items():
+            if spec is not None:
+                out[base + (name, "w")] = spec
+
+    def add_attn(base: tuple, plan):
+        add(base, q=plan.hash_q, k=plan.hash_k, v=plan.hash_v, o=plan.hash_o)
+
+    def add_ffn(base: tuple, plan):
+        add(base, **{"in": plan.hash_in, "gate": plan.hash_gate,
+                     "out": plan.hash_out})
+
+    # every arch kind embeds through _emb_plan: a hashed embedding bank
+    # exists whenever hash_embeddings is on, regardless of kind
+    ep = _emb_plan(cfg)
+    if ep.hashed is not None:
+        out[("embed", "emb")] = ep.hashed
+
+    if cfg.arch_kind == "decoder":
+        add_attn(("layers", "attn"), _attn_plan(cfg))
+        if cfg.moe:
+            # MoE expert banks sit directly under their name (no "w" leaf)
+            mp = _moe_plan(cfg)
+            for name, spec in (("in", mp.hash_in), ("gate", mp.hash_gate),
+                               ("out", mp.hash_out)):
+                if spec is not None:
+                    out[("layers", "moe", name)] = spec
+        else:
+            add_ffn(("layers", "ffn"), _ffn_plan(cfg))
+        if cfg.hash_embeddings and not cfg.tie_embeddings:
+            # only the decoder builder hashes its untied lm_head
+            out[("lm_head", "w")] = _hspec(
+                cfg, "lm_head", (cfg.d_model, cfg.padded_vocab))
+    elif cfg.arch_kind == "rwkv":
+        tm = _rwkv_plan(cfg)
+        add(("layers", "tm"), r=tm.hash_r, k=tm.hash_k, v=tm.hash_v,
+            g=tm.hash_g, o=tm.hash_o)
+        cm = _cmix_plan(cfg)
+        add(("layers", "cm"), k=cm.hash_k, v=cm.hash_v, r=cm.hash_r)
+    elif cfg.arch_kind == "zamba":
+        mb = _mamba_plan(cfg)
+        add(("mamba_groups", "mamba"),
+            in_proj=mb.hash_in, out_proj=mb.hash_out)
+        add_attn(("shared", "attn"), _attn_plan(cfg))
+        add_ffn(("shared", "ffn"), _ffn_plan(cfg))
+    elif cfg.arch_kind == "encdec":
+        add_attn(("encoder", "attn"),
+                 _attn_plan(cfg, causal=False, use_rope=False, prefix="enc"))
+        add_attn(("decoder", "self"),
+                 _attn_plan(cfg, causal=True, use_rope=False, prefix="dec"))
+        add_attn(("decoder", "cross"),
+                 _attn_plan(cfg, cross=True, causal=False, use_rope=False,
+                            prefix="xattn"))
+        fp = _ffn_plan(cfg)
+        add_ffn(("encoder", "ffn"), fp)
+        add_ffn(("decoder", "ffn"), fp)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # plans from config
 # ---------------------------------------------------------------------------
@@ -347,7 +420,7 @@ def _build_decoder(cfg: ArchConfig) -> Model:
         kv = P(None, L.CACHE_BATCH, L.SEQ, L.TP_KV, L.TP_HD)
         return {"k": kv, "v": kv, "index": P()}
 
-    def fwd_with_cache(params, x, cache, start):
+    def fwd_with_cache(params, x, cache, start, length=None):
         s = x.shape[1]
         start = jnp.asarray(start)
         if start.ndim == 1:     # per-slot decode positions (continuous batching)
@@ -368,13 +441,26 @@ def _build_decoder(cfg: ArchConfig) -> Model:
 
         x, (nk, nv) = jax.lax.scan(
             body, x, (params["layers"], is_global, cache["k"], cache["v"]))
-        new_cache = {"k": nk, "v": nv, "index": start + s}
+        if length is not None:
+            # Bucketed prefill (pad-and-mask): tokens were right-padded to
+            # a static bucket; pads sit AFTER the real prompt so causal
+            # attention never lets a real query see one.  Slice the single
+            # last real position before the LM head (also skips computing
+            # vocab logits for every pad), and advance the write index by
+            # the true length — the garbage K/V rows beyond it stay
+            # invisible (kv_valid masks >= index) and are overwritten as
+            # decode proceeds.
+            x = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+            new_cache = {"k": nk, "v": nv, "index": start + length}
+        else:
+            new_cache = {"k": nk, "v": nv, "index": start + s}
         return logits_fn(params, x), new_cache
 
     def prefill(params, batch):
         x = embed_input(params, batch)
         cache = batch["cache"]
-        logits, cache = fwd_with_cache(params, x, cache, cache["index"])
+        logits, cache = fwd_with_cache(params, x, cache, cache["index"],
+                                       length=batch.get("length"))
         return logits[:, -1:, :], cache
 
     def decode_step(params, tokens, cache):

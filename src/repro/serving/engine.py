@@ -92,6 +92,30 @@ class Engine:
         self._decode = jax.jit(model.decode_step)
 
     # ------------------------------------------------------------------
+    @classmethod
+    def from_artifact(cls, path_or_name: str, *,
+                      registry_root: Optional[str] = None,
+                      slots: int = 4, max_len: int = 512, eos_id: int = 1,
+                      seed: int = 0) -> "Engine":
+        """Cold-start an engine from a compressed model artifact.
+
+        path_or_name: a .hnart file path, or (with registry_root) a
+        registered model name, optionally ``name@version``.  The artifact
+        carries the config, hash seeds, and banks — no checkpoint or live
+        training state is involved (repro.artifact).  Quantized banks are
+        dequantized at load: the model layers need real arrays (a
+        keep-quantized engine path waits on an int8 decompress kernel).
+        """
+        from repro.artifact import io as artifact_io
+        if registry_root is not None:
+            from repro.artifact import registry as artifact_registry
+            entry = artifact_registry.resolve(registry_root, path_or_name)
+            path_or_name = entry["path"]
+        _, model, params = artifact_io.load_model(path_or_name)
+        return cls(model, params, slots=slots, max_len=max_len,
+                   eos_id=eos_id, seed=seed)
+
+    # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         req.tokens = []
         self._queue.append(req)
@@ -99,27 +123,45 @@ class Engine:
     def _free_slots(self) -> List[int]:
         return [i for i, s in enumerate(self.slots) if s.req is None]
 
+    BUCKET = 64
+
+    def _can_bucket(self, req: Request) -> bool:
+        """Pad-and-mask bucketing is sound only for pure KV-cache decoders:
+        pads after the prompt are causally invisible and the true length
+        rides through prefill, so garbage K/V stays masked.  Recurrent
+        kinds (rwkv/zamba) would fold pads into their state, and extras
+        (encoder frames / image tokens) shift positions — those stay
+        exact-length."""
+        return self.model.cfg.arch_kind == "decoder" and not req.extras
+
     def _admit(self) -> None:
         """Prefill queued requests into free slots (continuous batching).
 
-        Engineering note: each admission prefs a batch=1 cache and
-        scatters it into the slot — static shapes per prompt length
-        bucket; production would bucket prompt lengths to bound
-        recompilation (we pad to max_len buckets of 64)."""
+        Prompt lengths are bucketed to multiples of BUCKET with real
+        pad-and-mask (batch["length"] carries the true length into the
+        model), so prefill compiles once per bucket, not once per distinct
+        prompt length."""
         for i in self._free_slots():
             if not self._queue:
                 break
             req = self._queue.pop(0)
             p = len(req.prompt)
-            pad = (-p) % 64
-            prompt = np.pad(req.prompt, (0, pad))
-            batch = {"tokens": jnp.asarray(prompt[None, :p + pad]),
-                     "cache": self.model.init_cache(1, self.max_len)}
+            if self._can_bucket(req):
+                # clamp to the cache: a bucket can't exceed max_len (a
+                # prompt longer than max_len is a caller error either way)
+                bucket = min(-(-p // self.BUCKET) * self.BUCKET,
+                             self.max_len)
+                bucket = max(bucket, p)
+                prompt = np.pad(req.prompt, (0, bucket - p))
+                batch = {"tokens": jnp.asarray(prompt[None, :]),
+                         "cache": self.model.init_cache(1, self.max_len),
+                         "length": jnp.asarray(p, jnp.int32)}
+            else:
+                batch = {"tokens": jnp.asarray(req.prompt[None, :]),
+                         "cache": self.model.init_cache(1, self.max_len)}
             if req.extras:
                 batch.update({k: jnp.asarray(v) for k, v in
                               req.extras.items()})
-            # teacher-force only the real prompt: mask pad by re-slicing
-            batch["tokens"] = batch["tokens"][:, :p]
             logits, c1 = self._prefill(self.params, batch)
             self.cache = _slot_update(self.cache, c1, i)
             pos = int(np.asarray(c1["index"]))
@@ -129,15 +171,22 @@ class Engine:
             else:
                 self.cache["index"] = c1["index"]
             self.slots[i] = _Slot(req, pos)
-            tok = self._sample(logits[:, -1])
+            tok = self._sample(logits[:, -1], temps=[req.temperature])
             req.tokens.append(int(tok[0]))
             self._tokens[i, 0] = int(tok[0])
 
-    def _sample(self, logits) -> np.ndarray:
+    def _sample(self, logits, temps: Optional[List[float]] = None
+                ) -> np.ndarray:
+        """Sample next tokens.  temps: per-row temperatures; defaults to
+        the active slots' temperatures (decode path).  Prefill passes the
+        admitted request's temperature explicitly — slot state isn't
+        updated yet at that point, so deriving it from self.slots would
+        read a stale/unrelated slot."""
         logits = jnp.asarray(logits, jnp.float32)
-        temps = [s.req.temperature if s.req else 0.0 for s in self.slots]
-        if logits.shape[0] != self.n_slots:     # prefill path (B=1)
-            temps = [temps[0]]
+        if temps is None:
+            temps = [s.req.temperature if s.req else 0.0
+                     for s in self.slots]
+        assert len(temps) >= logits.shape[0], (len(temps), logits.shape)
         self._key, k = jax.random.split(self._key)
         greedy = jnp.argmax(logits, -1)
         t = jnp.asarray([max(t, 1e-6) for t in temps])[:logits.shape[0]]

@@ -49,8 +49,18 @@ def _paths_of(tree) -> Tuple[List[Tuple[str, Any]], Any]:
 
 
 def save(state, directory: str, step: int, keep: int = 3,
-         process_index: Optional[int] = None) -> str:
-    """Write one atomic checkpoint; returns its path."""
+         process_index: Optional[int] = None,
+         on_save: Optional[Callable[[str, Any, int], None]] = None) -> str:
+    """Write one atomic checkpoint; returns its path.
+
+    on_save: optional hook called (on process 0 only, after the commit
+    marker lands) with ``(final_path, state, step)`` — the artifact
+    exporter rides here so every committed training checkpoint can also
+    mint a deployable compressed artifact (repro.artifact) without the
+    trainer knowing the artifact format.  Hook errors are surfaced, not
+    swallowed: a failed export must fail loudly before the GC can reap
+    the checkpoint it shadowed.
+    """
     pid = jax.process_index() if process_index is None else process_index
     os.makedirs(directory, exist_ok=True)
     name = f"step_{step:08d}"
@@ -75,8 +85,41 @@ def save(state, directory: str, step: int, keep: int = 3,
         os.replace(tmp, final)                      # atomic rename
         with open(final + ".done", "w") as f:      # commit marker
             f.write(str(step))
+        if on_save is not None:
+            on_save(final, state, int(step))
         _gc(directory, keep)
     return final
+
+
+def artifact_exporter(cfg, artifact_dir: str,
+                      registry_root: Optional[str] = None,
+                      model_name: Optional[str] = None,
+                      keep: int = 3):
+    """Build an ``on_save`` hook that exports ``state["params"]`` as a
+    compressed artifact next to each committed checkpoint (and optionally
+    registers it in a model registry for serving cold starts).
+
+    keep: same keep-k GC as the checkpointer — only the newest ``keep``
+    exports stay in artifact_dir (a 100k-step run would otherwise pile up
+    thousands of artifacts).  Registered copies in the registry are
+    immutable and exempt: the registry is the long-term store."""
+    from repro import artifact as art
+
+    def hook(final_path: str, state, step: int) -> None:
+        path = os.path.join(artifact_dir, f"model_{step:08d}.hnart")
+        art.export_model(path, cfg, state["params"],
+                         meta={"step": step, "checkpoint": final_path})
+        if registry_root:
+            from repro.artifact import registry as reg
+            reg.register(registry_root, model_name or cfg.name, path,
+                         metadata={"step": step})
+        if keep > 0:
+            old = sorted(f for f in os.listdir(artifact_dir)
+                         if f.startswith("model_")
+                         and f.endswith(".hnart"))[:-keep]
+            for f in old:
+                os.remove(os.path.join(artifact_dir, f))
+    return hook
 
 
 def _gc(directory: str, keep: int) -> None:

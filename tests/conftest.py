@@ -1,3 +1,5 @@
+import sys
+
 import jax
 import pytest
 
@@ -9,3 +11,117 @@ def _clear_jax_caches_between_modules():
     subprocess compiles on this 35 GB container."""
     yield
     jax.clear_caches()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis shim
+# ---------------------------------------------------------------------------
+# The container has no `hypothesis` wheel (offline image).  The property
+# tests only use a small API surface — @given / @settings / strategies.
+# {integers, sampled_from, composite} — so when the real package is absent
+# we install a minimal deterministic stand-in: each @given test runs
+# `max_examples` examples drawn from a per-test seeded PRNG.  With the real
+# package installed this shim is inert.
+
+def _install_hypothesis_stub():
+    import functools
+    import random
+    import types
+    import zlib
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: opts[rng.randrange(len(opts))])
+
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.randrange(2)))
+
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    def tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.example(rng)
+                                           for s in strategies))
+
+    def composite(fn):
+        @functools.wraps(fn)
+        def builder(*args, **kwargs):
+            def draw_fn(rng):
+                return fn(lambda s: s.example(rng), *args, **kwargs)
+            return _Strategy(draw_fn)
+        return builder
+
+    def settings(**kw):
+        def deco(fn):
+            fn._stub_settings = dict(kw)
+            return fn
+        return deco
+
+    def given(*gargs, **gkwargs):
+        def deco(fn):
+            import inspect
+            params = list(inspect.signature(fn).parameters.values())
+            # real hypothesis binds positional strategies to the RIGHTMOST
+            # parameters (leading params stay fixtures); mirror that.
+            n_pos = len(gargs)
+            pos_names = [p.name for p in params[len(params) - n_pos:]] \
+                if n_pos else []
+            remaining = [p for p in params[:len(params) - n_pos]
+                         if p.name not in gkwargs]
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                # read settings at call time: @settings may sit above OR
+                # below @given (both valid with real hypothesis)
+                n = getattr(wrapper, "_stub_settings", {}).get(
+                    "max_examples", 25)
+                rng = random.Random(
+                    zlib.crc32(fn.__name__.encode()) & 0x7FFFFFFF)
+                for _ in range(n):
+                    ex_kwargs = {nm: s.example(rng)
+                                 for nm, s in zip(pos_names, gargs)}
+                    ex_kwargs.update({k: s.example(rng)
+                                      for k, s in gkwargs.items()})
+                    fn(*args, **kwargs, **ex_kwargs)
+
+            # pytest collects by signature: expose only the parameters NOT
+            # supplied by strategies so the rest aren't mistaken for
+            # fixtures.
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature(remaining)
+            return wrapper
+        return deco
+
+    strat = types.ModuleType("hypothesis.strategies")
+    strat.integers = integers
+    strat.sampled_from = sampled_from
+    strat.booleans = booleans
+    strat.floats = floats
+    strat.tuples = tuples
+    strat.composite = composite
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strat
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None)
+    hyp.__stub__ = True
+
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat
+
+
+try:  # pragma: no cover - depends on environment
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _install_hypothesis_stub()

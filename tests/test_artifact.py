@@ -1,0 +1,426 @@
+"""Compressed artifact subsystem tests: format round-trip fidelity,
+quantization tolerance, registry integrity, report accounting, the
+checkpoint export hook, and the serving-engine fixes that ride this PR
+(per-request prefill temperature, bucketed static-shape prefill)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.configs as C
+from repro import artifact
+from repro.artifact import format as afmt
+from repro.artifact import quant as aquant
+from repro.artifact import registry as areg
+from repro.artifact import report as areport
+from repro.configs.reduced import reduced
+from repro.core import HashedSpec, hashed, init, spec_from_dict, spec_to_dict
+from repro.models import build
+from repro.serving.engine import Engine, Request, generate_batch
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# HashedSpec <-> dict (backs the artifact header)
+# ---------------------------------------------------------------------------
+
+@st.composite
+def any_specs(draw):
+    mode = draw(st.sampled_from(["element", "block"]))
+    if mode == "element":
+        rows = draw(st.integers(4, 256))
+        cols = draw(st.integers(4, 256))
+        panel = draw(st.sampled_from([0, 16, 64]))
+        block = (128, 128)
+    else:
+        bm = draw(st.sampled_from([8, 16, 32]))
+        bn = draw(st.sampled_from([8, 16, 32]))
+        rows = bm * draw(st.integers(1, 4))
+        cols = bn * draw(st.integers(1, 4))
+        panel = 0
+        block = (bm, bn)
+    return HashedSpec(
+        virtual_shape=(rows, cols),
+        compression=draw(st.sampled_from([1.0, 0.5, 0.25, 0.125, 1 / 16])),
+        mode=mode,
+        seed=draw(st.integers(0, 2 ** 31 - 1)),
+        panel_cols=panel,
+        block_shape=block,
+        use_sign=draw(st.sampled_from([True, False])),
+    )
+
+
+@given(spec=any_specs())
+@settings(**SETTINGS)
+def test_spec_dict_roundtrip(spec):
+    d = spec_to_dict(spec)
+    json.loads(json.dumps(d))               # JSON-safe
+    back = spec_from_dict(d)
+    assert back == spec
+    # derived sizes survive (what the report relies on)
+    assert back.real_param_shape() == spec.real_param_shape()
+    assert back.virtual_size == spec.virtual_size
+
+
+def test_spec_dict_defaults_forward_compat():
+    d = {"virtual_shape": [8, 8], "compression": 0.5, "mode": "element",
+         "seed": 3}
+    s = spec_from_dict(d)
+    assert s.panel_cols == 0 and s.use_sign
+
+
+# ---------------------------------------------------------------------------
+# ragged block grids
+# ---------------------------------------------------------------------------
+
+def test_materialize_rows_block_ragged_cols():
+    """cols not a multiple of block_cols: the ceil tile grid is sliced back."""
+    spec = HashedSpec((32, 40), 0.5, mode="block", seed=5,
+                      block_shape=(16, 16))
+    w = init(jax.random.PRNGKey(0), spec)
+    v = hashed.materialize(w, spec)
+    assert v.shape == (32, 40)
+    row_ids = jnp.asarray([0, 7, 31, 15])
+    got = hashed.materialize_rows(w, spec, row_ids)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(v)[np.asarray(row_ids)],
+                               rtol=1e-6, atol=1e-6)
+    # batched row_ids shape
+    got2 = hashed.materialize_rows(w, spec, row_ids.reshape(2, 2))
+    assert got2.shape == (2, 2, 40)
+
+
+def test_matmul_scan_block_ragged_rows_and_cols():
+    spec = HashedSpec((40, 48), 0.5, mode="block", seed=9,
+                      block_shape=(16, 16))
+    w = init(jax.random.PRNGKey(1), spec)
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, 40))
+    want = x @ hashed.materialize(w, spec)
+    got = hashed.matmul_scan(x, w, spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dw_ref_block_ragged_matches_autodiff():
+    from repro.kernels import ref
+    spec = HashedSpec((40, 48), 0.5, mode="block", seed=3,
+                      block_shape=(16, 16))
+    w = init(jax.random.PRNGKey(0), spec)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 40))
+    g = jax.random.normal(jax.random.PRNGKey(2), (3, 48))
+    dw_auto = jax.grad(
+        lambda w: jnp.sum(x @ hashed.materialize(w, spec) * g))(w)
+    dw_ref = ref.hashed_dw_ref(x, g, spec)
+    np.testing.assert_allclose(np.asarray(dw_ref), np.asarray(dw_auto),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pallas_path_rejects_ragged_block():
+    from repro.kernels import ops
+    spec = HashedSpec((32, 40), 0.5, mode="block", seed=5,
+                      block_shape=(16, 16))
+    w = init(jax.random.PRNGKey(0), spec)
+    x = jnp.ones((4, 32))
+    with pytest.raises(ValueError, match="divide"):
+        ops.hashed_matmul(x, w, spec)
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["int8", "fp8"])
+def test_quant_roundtrip_error_bound(scheme):
+    rng = np.random.default_rng(0)
+    x = (rng.standard_normal((37, 53)) * 3).astype(np.float32)
+    z = aquant.quantize(x, scheme, group=64)
+    back = aquant.dequantize(z)
+    assert back.shape == x.shape and back.dtype == x.dtype
+    bound = aquant.max_abs_error(scheme, z.scales)
+    assert float(np.abs(back - x).max()) <= bound + 1e-7
+
+
+def test_quant_preserves_zeros_and_bf16():
+    import ml_dtypes
+    x = np.zeros((8, 8), ml_dtypes.bfloat16)
+    z = aquant.quantize(x, "int8", group=16)
+    back = aquant.dequantize(z)
+    assert str(back.dtype) == "bfloat16"
+    assert float(np.abs(np.asarray(back, np.float32)).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# format round-trip
+# ---------------------------------------------------------------------------
+
+def test_unflatten_mixed_dict_list():
+    tree = {"a": [{"w": np.arange(3)}, {"w": np.arange(2)}],
+            "b": {"c": np.ones(1)}}
+    entries = afmt.flatten_with_paths(tree)
+    back = afmt.unflatten_from_paths(entries)
+    assert isinstance(back["a"], list) and len(back["a"]) == 2
+    np.testing.assert_array_equal(back["a"][1]["w"], np.arange(2))
+    np.testing.assert_array_equal(back["b"]["c"], np.ones(1))
+
+
+def _mlp_roundtrip(tmp_path, quant):
+    """Paper-faithful hashmlp: export_tree + bank specs, logits fidelity."""
+    from repro.paper import mlp
+    spec = mlp.MLPSpec((784, 300, 10), method="hashed", compression=1 / 8)
+    params = mlp.init(spec, jax.random.PRNGKey(0))
+    bank_specs = {(l, "w"): spec.hashed_spec(l)
+                  for l in range(spec.n_layers)}
+    path = str(tmp_path / f"mlp_{quant}.hnart")
+    artifact.export_tree(path, params, bank_specs=bank_specs, quant=quant)
+    _, loaded = artifact.load(path)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 784))
+    want = np.asarray(mlp.apply(spec, params, x))
+    got = np.asarray(mlp.apply(spec, loaded, x))
+    return want, got, path
+
+
+def test_mlp_artifact_roundtrip_exact(tmp_path):
+    want, got, path = _mlp_roundtrip(tmp_path, "none")
+    np.testing.assert_array_equal(want, got)     # fp32: bit-exact
+    rows = areport.artifact_rows(afmt.read_header(path))
+    banks = [r for r in rows if r["kind"] == "bank"]
+    assert banks and all(abs(r["param_ratio"] - 1 / 8) < 0.01
+                         for r in banks)
+
+
+def test_mlp_artifact_roundtrip_int8(tmp_path):
+    want, got, _ = _mlp_roundtrip(tmp_path, "int8")
+    # documented int8 bound: per-element error <= absmax(group)/254;
+    # through 2 layers of a 300-wide net the logit drift stays small
+    assert float(np.abs(want - got).max()) < 0.15 * float(
+        np.abs(want).max() + 1.0)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "rwkv6-7b"])
+def test_transformer_artifact_logits_exact(arch, tmp_path):
+    cfg = reduced(C.get(arch)).with_(dtype="float32").hashed_variant(0.125)
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "m.hnart")
+    artifact.export_model(path, cfg, params)
+    cfg2, m2, p2 = artifact.load_model(path)
+    assert cfg2 == cfg
+    batch = {"tokens": jnp.asarray([[5, 9, 2, 7]]),
+             "cache": m.init_cache(1, 32)}
+    l1, _ = m.prefill(params, batch)
+    batch2 = {"tokens": jnp.asarray([[5, 9, 2, 7]]),
+              "cache": m2.init_cache(1, 32)}
+    l2, _ = m2.prefill(p2, batch2)
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_transformer_artifact_int8_tolerance(tmp_path):
+    cfg = reduced(C.get("qwen3-1.7b")).with_(
+        dtype="float32").hashed_variant(0.125)
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "m8.hnart")
+    artifact.export_model(path, cfg, params, quant="int8")
+    _, m2, p2 = artifact.load_model(path)
+    batch = {"tokens": jnp.asarray([[5, 9, 2, 7]]),
+             "cache": m.init_cache(1, 32)}
+    l1, _ = m.prefill(params, batch)
+    l2, _ = m2.prefill(p2, {"tokens": jnp.asarray([[5, 9, 2, 7]]),
+                            "cache": m2.init_cache(1, 32)})
+    # int8 per-group quantization: logits agree to a few percent of scale
+    denom = float(np.abs(np.asarray(l1)).max()) + 1e-6
+    assert float(np.abs(np.asarray(l1) - np.asarray(l2)).max()) / denom < 0.1
+
+
+def test_artifact_disk_size_tracks_compression(tmp_path):
+    """fp32 banks: bank bytes on disk == real_param_count * 4 exactly;
+    total file within alignment+header slack of the sum of sections."""
+    cfg = reduced(C.get("qwen3-1.7b")).with_(
+        dtype="float32").hashed_variant(0.125)
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "m.hnart")
+    header = artifact.export_model(path, cfg, params)
+    for e in header["leaves"]:
+        if e["kind"] == "bank":
+            spec = spec_from_dict(e["spec"])
+            assert e["nbytes"] == \
+                spec.real_param_count() * e["stack"] * 4
+    total_sections = sum(e["nbytes"] for e in header["leaves"])
+    size = os.path.getsize(path)
+    slack = header["data_start"] + 64 * (len(header["leaves"]) + 1)
+    assert total_sections <= size <= total_sections + slack
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_versions_and_integrity(tmp_path):
+    art = str(tmp_path / "a.hnart")
+    artifact.export_tree(art, {"w": np.arange(100, dtype=np.float32)})
+    root = str(tmp_path / "reg")
+    v1 = areg.register(root, "toy", art, metadata={"step": 1})
+    v2 = areg.register(root, "toy", art, metadata={"step": 2})
+    assert (v1, v2) == (1, 2)
+    e = areg.resolve(root, "toy")
+    assert e["version"] == 2 and e["metadata"]["step"] == 2
+    e1 = areg.resolve(root, "toy@1")
+    assert e1["version"] == 1
+    assert os.path.exists(e["path"])
+    # corruption must fail the cold start
+    with open(e["path"], "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        f.write(b"\xFF")
+    with pytest.raises(ValueError, match="integrity"):
+        areg.resolve(root, "toy")
+    # unknown model
+    with pytest.raises(KeyError):
+        areg.resolve(root, "nope")
+
+
+def test_registry_version_zero_is_an_error(tmp_path):
+    art = str(tmp_path / "a.hnart")
+    artifact.export_tree(art, {"w": np.arange(8, dtype=np.float32)})
+    root = str(tmp_path / "reg")
+    areg.register(root, "toy", art)
+    with pytest.raises(KeyError):
+        areg.resolve(root, "toy@0")
+    with pytest.raises(KeyError):
+        areg.resolve(root, "toy", version=0)
+
+
+def test_bank_spec_map_covers_hashed_embeddings_all_kinds():
+    from repro.models.transformer import bank_spec_map
+    for arch in ("qwen3-1.7b", "rwkv6-7b", "zamba2-2.7b"):
+        cfg = reduced(C.get(arch)).hashed_variant(0.125).with_(
+            hash_embeddings=True)
+        m = bank_spec_map(cfg)
+        assert ("embed", "emb") in m, arch
+        assert m[("embed", "emb")].virtual_shape == \
+            (cfg.padded_vocab, cfg.d_model)
+
+
+def test_engine_from_artifact_serves(tmp_path):
+    cfg = reduced(C.get("qwen3-1.7b")).with_(dtype="float32")
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "m.hnart")
+    artifact.export_model(path, cfg, params)
+    root = str(tmp_path / "reg")
+    areg.register(root, "qwen-toy", path)
+
+    eng = Engine.from_artifact("qwen-toy", registry_root=root,
+                               slots=2, max_len=64, eos_id=-1)
+    eng.submit(Request(uid=0, prompt=np.arange(5, dtype=np.int32) + 2,
+                       max_new_tokens=3))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].tokens) == 3
+    # identical to serving the live params
+    want = generate_batch(m, params, [np.arange(5, dtype=np.int32) + 2],
+                          max_new_tokens=3, max_len=64, slots=2, eos_id=-1)
+    assert done[0].tokens == want[0]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint export hook
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_on_save_exports_artifact(tmp_path):
+    from repro.train import checkpoint as ckpt_lib
+    cfg = reduced(C.get("qwen3-1.7b")).with_(dtype="float32")
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    state = {"params": params, "step": jnp.asarray(7)}
+    adir = str(tmp_path / "artifacts")
+    root = str(tmp_path / "reg")
+    os.makedirs(adir)
+    hook = ckpt_lib.artifact_exporter(cfg, adir, registry_root=root,
+                                      model_name="qwen-ckpt")
+    ckpt_lib.save(state, str(tmp_path / "ck"), 7, on_save=hook)
+    apath = os.path.join(adir, "model_00000007.hnart")
+    assert os.path.exists(apath)
+    header = afmt.read_header(apath)
+    assert header["meta"]["step"] == 7
+    e = areg.resolve(root, "qwen-ckpt")
+    assert e["metadata"]["step"] == 7
+    # the artifact holds ONLY params (no optimizer state)
+    paths = {tuple(x["path"])[:1] for x in header["leaves"]}
+    assert ("step",) not in paths
+
+
+# ---------------------------------------------------------------------------
+# serving engine fixes
+# ---------------------------------------------------------------------------
+
+def _tiny_model():
+    cfg = reduced(C.get("qwen3-1.7b")).with_(dtype="float32")
+    m = build(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def test_prefill_samples_with_request_temperature():
+    """Admitting into slot i>0 must use THAT request's temperature, not
+    slot 0's (the seed bug: temps[0])."""
+    _, m, params = _tiny_model()
+    seen = []
+
+    class Spy(Engine):
+        def _sample(self, logits, temps=None):
+            if temps is not None:
+                seen.append(list(temps))
+            return super()._sample(logits, temps)
+
+    eng = Spy(m, params, slots=2, max_len=64, eos_id=-1)
+    eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32) + 3,
+                       max_new_tokens=2, temperature=0.0))
+    eng.submit(Request(uid=1, prompt=np.arange(5, dtype=np.int32) + 1,
+                       max_new_tokens=2, temperature=7.5))
+    eng.run()
+    assert [0.0] in seen and [7.5] in seen, seen
+
+
+def test_prefill_bucketing_single_compile_and_exact():
+    """Distinct prompt lengths in one 64-bucket share ONE prefill trace,
+    and pad-and-mask generation matches exact-length sequential decode."""
+    _, m, params = _tiny_model()
+    traces = [0]
+    orig = m.prefill
+
+    def counting(p, b):
+        traces[0] += 1
+        return orig(p, b)
+
+    m2 = m._replace(prefill=counting)
+    prompts = [np.arange(n, dtype=np.int32) + 1 for n in (4, 7, 23, 12)]
+    outs = generate_batch(m2, params, prompts, max_new_tokens=4,
+                          max_len=96, slots=2, eos_id=-1)
+    assert traces[0] == 1, f"{traces[0]} prefill traces for one bucket"
+
+    def single(prompt, n=4):
+        batch = {"tokens": jnp.asarray(prompt[None]),
+                 "cache": m.init_cache(1, 96)}
+        logits, cache = m.prefill(params, batch)
+        toks = [int(jnp.argmax(logits[0, -1]))]
+        for _ in range(n - 1):
+            logits, cache = m.decode_step(
+                params, jnp.asarray([[toks[-1]]], jnp.int32), cache)
+            toks.append(int(jnp.argmax(logits[0, -1])))
+        return toks
+
+    for pr, got in zip(prompts, outs):
+        assert single(pr) == got
+
+
+def test_prefill_bucket_clamped_to_max_len():
+    """max_len below the 64-bucket: padding must clamp to the cache size
+    (the unclamped bucket over-ran the KV dynamic_update_slice)."""
+    _, m, params = _tiny_model()
+    prompts = [np.arange(9, dtype=np.int32) + 1]
+    outs = generate_batch(m, params, prompts, max_new_tokens=3,
+                          max_len=48, slots=1, eos_id=-1)
+    assert len(outs[0]) == 3
