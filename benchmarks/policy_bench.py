@@ -1,0 +1,157 @@
+"""Compression-policy benchmark: uniform vs budget-solved policies.
+
+For the paper's own MLP config (``hashmlp``) and one transformer config,
+measures under (a) the uniform flat-knob compression and (b) an
+equal-memory budget-solved policy (attention pinned, solver reallocating
+the remainder):
+
+- real parameter count per policy, and its error vs the requested
+  equal-memory target (the budget solver's acceptance metric),
+- training-step throughput in tokens/s (jitted loss+grad, the hot path
+  both launchers drive),
+
+and writes ``BENCH_policy.json`` so the perf trajectory of the policy
+API is tracked in CI.
+
+    PYTHONPATH=src python -m benchmarks.policy_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as C
+from repro import policy as POL
+from repro.configs.reduced import reduced
+from repro.models import build
+from repro.models.transformer import bank_spec_map
+
+BUDGET = 1 / 8
+
+
+def _budget_policy():
+    return POL.CompressionPolicy(
+        budget=BUDGET,
+        panel_cols=0,   # match the uniform variant's bucket space so the
+                        # timing difference is the allocation, not panels
+        rules=(
+            # pin attention coarse; the solver pushes FFN below 1/8 to
+            # keep the TOTAL on the equal-memory target
+            POL.PolicyRule(match="*attn*", compression=1 / 4),
+        ))
+
+
+def _configs(smoke: bool):
+    mlp = C.get("hashmlp-3layer")
+    tfm = reduced(C.get("qwen3-1.7b"))
+    if smoke:
+        mlp = mlp.with_(d_model=256, d_ff=256, name="hashmlp-3layer-smoke")
+    return [("hashmlp", mlp), ("qwen3-reduced", tfm)]
+
+
+def _real_params(cfg) -> int:
+    m = build(cfg)
+    shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(shapes))
+
+
+def _bank_totals(cfg):
+    specs = bank_spec_map(cfg)
+    virtual = sum(s.virtual_size for s in specs.values())
+    real = sum(s.real_param_count() for s in specs.values())
+    return virtual, real
+
+
+def _tokens_per_s(cfg, *, batch: int, seq: int, steps: int) -> float:
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batch_arrays = {
+        "tokens": jnp.asarray(rng.integers(
+            0, cfg.vocab_size, (batch, seq)), jnp.int32),
+        "targets": jnp.asarray(rng.integers(
+            0, cfg.vocab_size, (batch, seq)), jnp.int32),
+    }
+
+    @jax.jit
+    def step(p, b):
+        (loss, _), grads = jax.value_and_grad(
+            m.train_loss, has_aux=True)(p, b)
+        return loss, grads
+
+    loss, grads = step(params, batch_arrays)        # compile
+    jax.block_until_ready(loss)
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        loss, grads = step(params, batch_arrays)
+    jax.block_until_ready(loss)
+    dt = (time.perf_counter() - t0) / steps
+    return batch * seq / dt
+
+
+def bench_one(tag: str, cfg, *, smoke: bool) -> dict:
+    batch, seq = (2, 32) if smoke else (8, 128)
+    steps = 2 if smoke else 10
+    budgeted_policy = _budget_policy()
+
+    variants = {
+        "uniform": cfg.hashed_variant(BUDGET).with_(hash_panel_cols=0),
+        "budget": cfg.policy_variant(budgeted_policy).with_(
+            hash_panel_cols=0),
+    }
+    out = {"config": cfg.name, "budget": BUDGET, "variants": {}}
+    for name, vcfg in variants.items():
+        virtual, bank_real = _bank_totals(vcfg)
+        target = BUDGET * virtual
+        tps = _tokens_per_s(vcfg, batch=batch, seq=seq, steps=steps)
+        out["variants"][name] = {
+            "name": vcfg.name,
+            "bank_virtual_params": int(virtual),
+            "bank_real_params": int(bank_real),
+            "budget_target": int(target),
+            "budget_error": round(abs(bank_real - target) / target, 5),
+            "model_real_params": int(_real_params(vcfg)),
+            "train_tokens_per_s": round(tps, 1),
+        }
+        print(f"[{tag}:{name}] banks {bank_real:,}/{virtual:,} real/virt "
+              f"(target {int(target):,}, "
+              f"err {out['variants'][name]['budget_error']:.3%}) "
+              f"{tps:,.0f} tok/s", flush=True)
+    return out
+
+
+def main(smoke: bool = False, out_json: str = "BENCH_policy.json") -> dict:
+    t0 = time.time()
+    results = {"budget": BUDGET, "smoke": smoke, "configs": {}}
+    for tag, cfg in _configs(smoke):
+        results["configs"][tag] = bench_one(tag, cfg, smoke=smoke)
+    results["wall_s"] = round(time.time() - t0, 1)
+    # acceptance: both policies hold the equal-memory budget within 1%
+    worst = max(v["budget_error"]
+                for c in results["configs"].values()
+                for v in c["variants"].values())
+    results["worst_budget_error"] = worst
+    ok = worst <= 0.01
+    print(f"\nworst equal-memory error: {worst:.3%} "
+          f"({'OK (within 1%)' if ok else 'EXCEEDS 1%'})")
+    if out_json:
+        os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {out_json}")
+    return results
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--smoke", action="store_true",
+                   help="CI profile: tiny shapes, 2 timed steps")
+    p.add_argument("--out", default="BENCH_policy.json")
+    args = p.parse_args()
+    main(smoke=args.smoke, out_json=args.out)

@@ -27,22 +27,27 @@ from repro.artifact.io import load, load_model, open_artifact  # noqa: F401
 
 
 def export_model(path: str, cfg, params, *, quant: Optional[str] = None,
-                 group: Optional[int] = None, meta: Optional[dict] = None
-                 ) -> dict:
+                 group: Optional[int] = None, quant_min_size: int = 4096,
+                 meta: Optional[dict] = None) -> dict:
     """Serialize a built model's params into a compressed artifact.
 
     quant/group default to the config's artifact knobs
     (cfg.artifact_quant / cfg.artifact_group).  Returns the header.
     """
     from repro.artifact import format as F
-    from repro.models.transformer import bank_spec_map
+    from repro.models.transformer import bank_spec_map, slot_assignments
 
     scheme = getattr(cfg, "artifact_quant", "none") if quant is None \
         else quant
     grp = getattr(cfg, "artifact_group", 64) if group is None else group
+    # per-slot quant from the compression policy overrides the global
+    # scheme for that bank leaf
+    overrides = {path: a.quant for path, a in slot_assignments(cfg).items()
+                 if a.quant is not None}
     return F.write(path, params, config=F.config_to_dict(cfg),
                    bank_specs=bank_spec_map(cfg), quant=scheme,
-                   quant_group=grp, meta=meta)
+                   quant_group=grp, quant_min_size=quant_min_size,
+                   quant_overrides=overrides, meta=meta)
 
 
 def export_tree(path: str, params, *, bank_specs=None, quant: str = "none",

@@ -99,15 +99,24 @@ def unflatten_from_paths(entries: List[Tuple[Tuple, Any]]):
 # ---------------------------------------------------------------------------
 
 def config_to_dict(cfg) -> dict:
+    from repro import policy as POL
     d = dataclasses.asdict(cfg)
     d["hash_block"] = list(d["hash_block"])
+    if cfg.hash_policy is not None:
+        d["hash_policy"] = POL.policy_to_dict(cfg.hash_policy)
     return d
 
 
 def config_from_dict(d: dict):
+    from repro import policy as POL
     from repro.configs.base import ArchConfig
     kw = dict(d)
     kw["hash_block"] = tuple(kw.get("hash_block", (128, 128)))
+    if kw.get("hash_policy"):
+        # non-strict: artifacts from newer writers may carry policy keys
+        # this reader doesn't know; drop them like unknown config keys
+        kw["hash_policy"] = POL.policy_from_dict(kw["hash_policy"],
+                                                 strict=False)
     fields = {f.name for f in dataclasses.fields(ArchConfig)}
     # forward-compat: ignore unknown keys from newer writers
     kw = {k: v for k, v in kw.items() if k in fields}
@@ -126,6 +135,7 @@ def write(path: str, params, *, config: Optional[dict] = None,
           bank_specs: Optional[Dict[Tuple, H.HashedSpec]] = None,
           quant: str = "none", quant_group: int = 64,
           quant_min_size: int = 4096,
+          quant_overrides: Optional[Dict[Tuple, str]] = None,
           meta: Optional[dict] = None) -> dict:
     """Serialize ``params`` into one artifact file; returns the header.
 
@@ -133,9 +143,19 @@ def write(path: str, params, *, config: Optional[dict] = None,
     stacking may add leading array axes; the leaf then holds ``stack``
     independent banks and its element count is a multiple of
     ``spec.real_param_count()``).
+
+    quant_overrides: leaf path tuple -> scheme, overriding the global
+    ``quant`` for that leaf (compression-policy per-slot quantization);
+    ``"none"`` exempts a leaf from a global scheme.  Readers need no new
+    logic: every leaf already carries its own quant metadata.
     """
     if quant not in Q.SCHEMES:
         raise ValueError(f"quant must be one of {Q.SCHEMES}")
+    quant_overrides = quant_overrides or {}
+    for p, scheme in quant_overrides.items():
+        if scheme not in Q.SCHEMES:
+            raise ValueError(f"quant override for {p}: {scheme!r} "
+                             f"not in {Q.SCHEMES}")
     bank_specs = bank_specs or {}
     entries = flatten_with_paths(params)
 
@@ -168,14 +188,15 @@ def write(path: str, params, *, config: Optional[dict] = None,
                     f"leaf {p}: size {arr.size} is not a multiple of the "
                     f"spec's real_param_count {rp} — bank_specs mismatch")
             entry["stack"] = int(arr.size // rp)
-        if quant != "none" and Q.should_quantize(p, arr, spec is not None,
-                                                min_size=quant_min_size):
-            z = Q.quantize(arr, quant, quant_group)
+        scheme = quant_overrides.get(p, quant)
+        if scheme != "none" and Q.should_quantize(p, arr, spec is not None,
+                                                  min_size=quant_min_size):
+            z = Q.quantize(arr, scheme, quant_group)
             qoff, qn = add_section(z.q.tobytes())
             soff, sn = add_section(z.scales.tobytes())
             entry.update({
                 "offset": qoff, "nbytes": qn,
-                "stored_dtype": str(Q.stored_dtype(quant)),
+                "stored_dtype": str(Q.stored_dtype(scheme)),
                 "quant": {"scheme": z.scheme, "group": z.group,
                           "pad": z.pad, "num_groups": int(z.scales.size),
                           "scales_offset": soff, "scales_nbytes": sn},

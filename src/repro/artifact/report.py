@@ -13,6 +13,11 @@ Rows are aggregated per top-level component ("layers/attn/q", ...), which
 matches the per-layer budgeting view of Structured Multi-Hashing (Eban et
 al., 2019): each component's ratio is independently visible, so a config
 sweep can trade compression between, say, attention and FFN banks.
+
+When the artifact's config carries a compression policy, a second view
+(:func:`rows_by_rule`) groups leaves by the policy rule that decided them
+— the accounting that tells you whether each rule's slice of the budget
+landed where the solver put it.
 """
 from __future__ import annotations
 
@@ -99,9 +104,61 @@ def format_table(rows: List[Dict[str, Any]],
     return "\n".join(lines)
 
 
+def rows_by_rule(header: dict) -> Optional[List[Dict[str, Any]]]:
+    """Accounting rows grouped by the policy rule that matched each leaf.
+
+    Returns None when the artifact has no hashed config to derive a
+    policy from.  Bank leaves group under their matched rule's pattern
+    (``(defaults)`` when no rule matched); non-bank leaves group under
+    ``(dense)``.
+    """
+    from repro import policy as POL
+    cfg_dict = header.get("config")
+    if not cfg_dict or not cfg_dict.get("hashed"):
+        return None
+    cfg = F.config_from_dict(cfg_dict)
+    pol = POL.effective(cfg)
+    groups: Dict[str, Dict[str, Any]] = {}
+    for e in header["leaves"]:
+        if e["kind"] == "bank":
+            rule = pol.match(POL.slot_path(tuple(e["path"])))
+            name = rule.match if rule is not None else "(defaults)"
+        else:
+            name = "(dense)"
+        g = groups.setdefault(name, {
+            "name": name, "kind": e["kind"], "virtual_params": 0,
+            "real_params": 0, "virtual_bytes": 0, "real_bytes": 0,
+            "disk_bytes": 0})
+        n_elems = int(np.prod(e["shape"])) if e["shape"] else 1
+        esize = _dtype_size(e["dtype"])
+        if e["kind"] == "bank":
+            spec = H.spec_from_dict(e["spec"])
+            virtual = spec.virtual_size * int(e.get("stack", 1))
+        else:
+            virtual = n_elems
+        g["virtual_params"] += virtual
+        g["real_params"] += n_elems
+        g["virtual_bytes"] += virtual * esize
+        g["real_bytes"] += n_elems * esize
+        disk = e["nbytes"]
+        if e.get("quant"):
+            disk += e["quant"]["scales_nbytes"]
+        g["disk_bytes"] += disk
+    rows = sorted(groups.values(), key=lambda r: -r["virtual_bytes"])
+    for r in rows:
+        r["param_ratio"] = r["real_params"] / max(r["virtual_params"], 1)
+        r["disk_ratio"] = r["disk_bytes"] / max(r["virtual_bytes"], 1)
+    return rows
+
+
 def report(path_or_header) -> str:
-    """Convenience: artifact path (or header) -> printable table."""
+    """Convenience: artifact path (or header) -> printable table(s)."""
     header = (path_or_header if isinstance(path_or_header, dict)
               else F.read_header(path_or_header))
     rows = artifact_rows(header)
-    return format_table(rows, totals(rows, header))
+    out = format_table(rows, totals(rows, header))
+    by_rule = rows_by_rule(header)
+    if by_rule is not None:
+        out += "\n\nby policy rule:\n"
+        out += format_table(by_rule, totals(by_rule))
+    return out

@@ -9,6 +9,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple
 
+from repro.policy import CompressionPolicy
+
 _REGISTRY: Dict[str, "ArchConfig"] = {}
 
 
@@ -49,7 +51,11 @@ class ArchConfig:
     encoder_seq: int = 0             # precomputed frame embeddings (stub)
     # vlm (llava)
     num_image_tokens: int = 0        # stub patch embeddings prepended
-    # paper technique
+    # paper technique.  The flat knobs below are the legacy uniform
+    # configuration; when ``hash_policy`` is set it takes precedence and
+    # the flat knobs are ignored (repro.policy.effective) — legacy
+    # configs lower into a single-rule policy producing byte-identical
+    # HashedSpecs.
     hashed: bool = False
     compression: float = 0.125
     hash_mode: str = "element"       # element | block
@@ -57,6 +63,7 @@ class ArchConfig:
     hash_block: Tuple[int, int] = (128, 128)
     hash_embeddings: bool = False
     hash_path: str = "scan"          # execution path for hashed matmuls
+    hash_policy: Optional[CompressionPolicy] = None
     # compressed artifact export (repro.artifact)
     artifact_quant: str = "none"     # none | int8 | fp8 bank quantization
     artifact_group: int = 64         # per-group scale granularity
@@ -78,7 +85,16 @@ class ArchConfig:
                        mode: str = "element") -> "ArchConfig":
         return self.with_(hashed=True, compression=compression,
                           hash_mode=mode,
-                          name=f"{self.name}-hashed{int(1/compression)}")
+                          name=f"{self.name}-{compression_tag(compression)}")
+
+    def policy_variant(self, policy: CompressionPolicy) -> "ArchConfig":
+        """Hashed variant driven by a CompressionPolicy (per-slot rules
+        and/or an equal-memory budget)."""
+        policy.validate()
+        tag = (f"budget{policy.budget:g}" if policy.budget is not None
+               else "policy")
+        return self.with_(hashed=True, hash_policy=policy,
+                          name=f"{self.name}-{tag}")
 
     def param_count_dense(self) -> int:
         """Approximate dense (virtual) parameter count, for roofline N."""
@@ -122,6 +138,47 @@ class ArchConfig:
         return L * (attn + ffn_active) + emb
 
 
+def compression_tag(compression: float) -> str:
+    """Exact name tag for a compression ratio: reciprocal rates keep the
+    historical ``hashed8`` form; anything else gets an exact ``hashedc``
+    tag (0.3 -> ``hashedc0.3``, not the misleading ``hashed3``).
+    ``get`` parses both back (variant-name round-trip)."""
+    inv = 1.0 / compression
+    if abs(inv - round(inv)) < 1e-9:
+        return f"hashed{int(round(inv))}"
+    return f"hashedc{compression:g}"
+
+
+def _parse_variant(name: str) -> Optional["ArchConfig"]:
+    """Derive ``<base>[-reduced]-hashedN|-hashedcX`` names not in the
+    registry, so variant names round-trip through ``get``."""
+    base, sep, tag = name.rpartition("-")
+    if not sep or not base:
+        return None
+    if tag.startswith("hashedc"):
+        try:
+            compression = float(tag[len("hashedc"):])
+        except ValueError:
+            return None
+    elif tag.startswith("hashed") and tag[len("hashed"):].isdigit():
+        compression = 1.0 / int(tag[len("hashed"):])
+    else:
+        return None
+    reduce_it = base.endswith("-reduced")
+    if reduce_it:
+        base = base[: -len("-reduced")]
+    if base not in _REGISTRY:
+        return None
+    cfg = _REGISTRY[base]
+    if reduce_it:
+        from repro.configs.reduced import reduced
+        cfg = reduced(cfg)
+    cfg = cfg.hashed_variant(compression)
+    # the tag must regenerate exactly, else the name would drift on the
+    # next round-trip
+    return cfg if cfg.name == name else None
+
+
 def register(cfg: ArchConfig) -> ArchConfig:
     _REGISTRY[cfg.name] = cfg
     return cfg
@@ -129,9 +186,12 @@ def register(cfg: ArchConfig) -> ArchConfig:
 
 def get(name: str) -> ArchConfig:
     import repro.configs  # noqa: F401  (ensure registration side effects)
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
-    return _REGISTRY[name]
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    derived = _parse_variant(name)
+    if derived is not None:
+        return derived
+    raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
 
 
 def names():

@@ -53,6 +53,11 @@ class HashedSpec:
     panel_cols: int = 0             # element mode: 0 => global bucket space
     block_shape: Tuple[int, int] = (128, 128)
     use_sign: bool = True
+    # Execution hint, NOT part of the matrix's identity: which matmul path
+    # the policy picked for this slot ("" = caller's default).  Excluded
+    # from equality/serialization so policy-resolved specs stay
+    # byte-identical to pre-policy ones (see repro.policy).
+    exec_path: str = dataclasses.field(default="", compare=False)
 
     # ---- derived sizes -------------------------------------------------
     @property

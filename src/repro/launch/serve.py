@@ -19,6 +19,7 @@ Prints per-request generations + aggregate throughput.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -26,6 +27,7 @@ import jax
 import numpy as np
 
 import repro.configs as C
+from repro import policy
 from repro.configs.reduced import reduced as reduce_cfg
 from repro.models import build
 from repro.serving.engine import Engine, Request
@@ -39,6 +41,12 @@ def main() -> int:
     p.add_argument("--hashed", action="store_true")
     p.add_argument("--compression", type=float, default=None,
                    help="hashed compression ratio (default 0.125)")
+    p.add_argument("--policy", default=None,
+                   help="compression policy JSON (per-slot rules; "
+                        "implies hashing)")
+    p.add_argument("--budget", default=None,
+                   help="equal-memory real-param target ratio "
+                        "('0.125' or '1/8'; implies hashing)")
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--max-new", type=int, default=16)
@@ -66,7 +74,8 @@ def main() -> int:
         ignored = [flag for flag, on in [
             ("--arch", args.arch), ("--ckpt-dir", args.ckpt_dir),
             ("--hashed", args.hashed), ("--reduced", args.reduced),
-            ("--compression", args.compression is not None)] if on]
+            ("--compression", args.compression is not None),
+            ("--policy", args.policy), ("--budget", args.budget)] if on]
         if ignored:
             p.error(f"{'/'.join(ignored)} cannot be combined with an "
                     f"artifact source (the artifact carries its own "
@@ -85,7 +94,17 @@ def main() -> int:
         cfg = C.get(args.arch)
         if args.reduced:
             cfg = reduce_cfg(cfg)
-        if args.hashed:
+        if args.policy or args.budget:
+            if args.hashed or args.compression is not None:
+                p.error("--policy/--budget replace --hashed/--compression "
+                        "(pin ratios with a policy rule instead)")
+            pol = (policy.load(args.policy) if args.policy
+                   else policy.CompressionPolicy())
+            if args.budget:
+                pol = dataclasses.replace(
+                    pol, budget=policy.parse_ratio(args.budget))
+            cfg = cfg.policy_variant(pol)
+        elif args.hashed:
             cfg = cfg.hashed_variant(args.compression
                                      if args.compression is not None
                                      else 0.125)

@@ -217,7 +217,9 @@ def make_step(arch: str, shape_name: str, mesh: Mesh, *,
         state = jax.eval_shape(
             lambda: step_lib.init_state(model, optimizer,
                                         jax.random.PRNGKey(0)))
-        state_specs = step_lib.state_pspecs(model, optimizer)
+        # under the mesh: bank_pspec derives its shard grid from it
+        with shd.use_mesh(mesh, rules):
+            state_specs = step_lib.state_pspecs(model, optimizer)
         batch = train_batch_struct(cfg, cell)
         batch_specs = train_batch_pspecs(cfg, cell)
         in_sh = (resolve(state_specs), resolve(batch_specs))
@@ -230,7 +232,8 @@ def make_step(arch: str, shape_name: str, mesh: Mesh, *,
         return StepBundle(fn, (state, batch), in_sh, out_sh, cfg, cell, meta)
 
     params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
-    pspecs = model.pspecs()
+    with shd.use_mesh(mesh, rules):
+        pspecs = model.pspecs()
     mlen = cache_len(cfg, cell)
     cache = jax.eval_shape(lambda: model.init_cache(cell.batch, mlen))
     cache_specs = model.cache_pspecs(cell.batch, mlen)

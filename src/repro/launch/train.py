@@ -19,6 +19,7 @@ Fault-tolerance wiring:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -29,6 +30,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 import repro.configs as C
+from repro import policy
 from repro.configs.reduced import reduced as reduce_cfg
 from repro.data import lm_stream, pipeline
 from repro.distributed import sharding as shd
@@ -57,8 +59,12 @@ def build_runner(cfg, mesh, *, optimizer_name="adamw", lr=3e-4,
     rules = (shd.MULTI_POD_RULES if "pod" in mesh.axis_names
              else shd.SINGLE_POD_RULES)
 
-    state_specs = step_lib.state_pspecs(model, optimizer,
-                                        with_residual=with_residual)
+    # spec construction under the active mesh: bank_pspec derives its
+    # shard grid from the mesh axes (a (1,1) CI mesh shards nothing it
+    # can't; an elastic (8,16) restart shards what it can)
+    with shd.use_mesh(mesh, rules):
+        state_specs = step_lib.state_pspecs(model, optimizer,
+                                            with_residual=with_residual)
 
     def resolve(tree):
         return jax.tree.map(
@@ -172,7 +178,15 @@ def main() -> int:
                    help="CPU-scale variant of the arch (same family)")
     p.add_argument("--hashed", action="store_true",
                    help="enable the paper's hashed weight sharing")
-    p.add_argument("--compression", type=float, default=0.125)
+    p.add_argument("--compression", type=float, default=None,
+                   help="uniform hashed compression ratio (default 0.125)")
+    p.add_argument("--policy", default=None,
+                   help="compression policy JSON (per-slot rules; implies "
+                        "hashing — see repro.policy)")
+    p.add_argument("--budget", default=None,
+                   help="equal-memory target: total real params as a "
+                        "ratio of dense ('0.125' or '1/8'); solver "
+                        "allocates per-slot ratios (implies hashing)")
     p.add_argument("--steps", type=int, default=100)
     p.add_argument("--batch", type=int, default=8)
     p.add_argument("--seq", type=int, default=128)
@@ -205,8 +219,19 @@ def main() -> int:
     cfg = C.get(args.arch)
     if args.reduced:
         cfg = reduce_cfg(cfg)
-    if args.hashed:
-        cfg = cfg.hashed_variant(args.compression)
+    if args.policy or args.budget:
+        if args.hashed or args.compression is not None:
+            p.error("--policy/--budget replace --hashed/--compression "
+                    "(pin ratios with a policy rule instead)")
+        pol = (policy.load(args.policy) if args.policy
+               else policy.CompressionPolicy())
+        if args.budget:
+            pol = dataclasses.replace(
+                pol, budget=policy.parse_ratio(args.budget))
+        cfg = cfg.policy_variant(pol)
+    elif args.hashed:
+        cfg = cfg.hashed_variant(args.compression
+                                 if args.compression is not None else 0.125)
     if args.artifact_quant != "none":
         cfg = cfg.with_(artifact_quant=args.artifact_quant)
 

@@ -20,12 +20,13 @@ import dataclasses
 import functools
 import math
 import zlib
-from typing import Any, Callable, Dict, NamedTuple, Optional
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import policy as POL
 from repro.configs.base import ArchConfig
 from repro.core import hashed as H
 from repro.core.hashing import derive_seed
@@ -75,97 +76,121 @@ def stack_init(init_fn, keys):
 
 
 # ---------------------------------------------------------------------------
-# hashed-spec factory
+# hashed-slot inventory + policy resolution
 # ---------------------------------------------------------------------------
 
-def _hspec(cfg: ArchConfig, slot: str, vshape) -> Optional[H.HashedSpec]:
-    if not cfg.hashed:
-        return None
+def _slot_seed(seed_key: str) -> int:
     # zlib.crc32, NOT builtin hash(): the latter is salted per process
     # (PYTHONHASHSEED) and would give every host a different weight-sharing
     # pattern — fatal for multi-host SPMD and checkpoint restore.
-    seed = derive_seed(0xC0FFEE, zlib.crc32(slot.encode()) & 0x7FFFFFFF)
-    return H.HashedSpec(
-        virtual_shape=tuple(vshape),
-        compression=cfg.compression,
-        mode=cfg.hash_mode,
-        seed=seed,
-        panel_cols=(cfg.hash_panel_cols if cfg.hash_mode == "element" else 0),
-        block_shape=tuple(cfg.hash_block),
-    )
+    return derive_seed(0xC0FFEE, zlib.crc32(seed_key.encode()) & 0x7FFFFFFF)
+
+
+def hash_slots(cfg: ArchConfig) -> Tuple[POL.Slot, ...]:
+    """Every hashable projection slot of a model, declaratively.
+
+    One entry per param-leaf path (layer stacking adds a leading array
+    axis, never a path component) with its dense virtual shape and hash
+    seed.  Seeds keep the pre-policy derivation (``attn.q``, ``ffn.out``,
+    ``embed``, ...) so legacy flat-knob configs resolve to byte-identical
+    weight-sharing patterns; encoder/decoder FFNs in encdec share seed
+    keys (they historically shared one plan).  ``default_on`` encodes the
+    legacy embedding gate (``hash_embeddings``), overridable per rule.
+    """
+    if not cfg.hashed:
+        return ()
+    d = cfg.d_model
+    hq = cfg.num_heads * cfg.head_dim
+    hkv = cfg.num_kv_heads * cfg.head_dim
+    gated = cfg.activation in ("swiglu", "geglu")
+    slots = []
+
+    def add(path, seed_key, vshape, on=True):
+        slots.append(POL.Slot(path=tuple(path), virtual_shape=tuple(vshape),
+                              seed=_slot_seed(seed_key), default_on=on))
+
+    def add_attn(base, prefix):
+        add(base + ("q", "w"), f"{prefix}.q", (d, hq))
+        add(base + ("k", "w"), f"{prefix}.k", (d, hkv))
+        add(base + ("v", "w"), f"{prefix}.v", (d, hkv))
+        add(base + ("o", "w"), f"{prefix}.o", (hq, d))
+
+    def add_ffn(base, prefix):
+        add(base + ("in", "w"), f"{prefix}.in", (d, cfg.d_ff))
+        if gated:
+            add(base + ("gate", "w"), f"{prefix}.gate", (d, cfg.d_ff))
+        add(base + ("out", "w"), f"{prefix}.out", (cfg.d_ff, d))
+
+    # every arch kind embeds through _emb_plan; the bank exists whenever
+    # the policy turns the slot on (default: the hash_embeddings knob)
+    add(("embed", "emb"), "embed", (cfg.padded_vocab, d),
+        on=cfg.hash_embeddings)
+
+    if cfg.arch_kind == "decoder":
+        add_attn(("layers", "attn"), "attn")
+        if cfg.moe:
+            # MoE expert banks sit directly under their name (no "w" leaf)
+            e, f = cfg.num_experts, cfg.moe_d_ff
+            add(("layers", "moe", "in"), "moe.in", (e * d, f))
+            if gated:
+                add(("layers", "moe", "gate"), "moe.gate", (e * d, f))
+            add(("layers", "moe", "out"), "moe.out", (e * f, d))
+        else:
+            add_ffn(("layers", "ffn"), "ffn")
+        if not cfg.tie_embeddings:
+            # only the decoder builder hashes its untied lm_head
+            add(("lm_head", "w"), "lm_head", (d, cfg.padded_vocab),
+                on=cfg.hash_embeddings)
+    elif cfg.arch_kind == "rwkv":
+        for name in ("r", "k", "v", "g", "o"):
+            add(("layers", "tm", name, "w"), f"rwkv.{name}", (d, d))
+        add(("layers", "cm", "k", "w"), "cmix.k", (d, cfg.d_ff))
+        add(("layers", "cm", "v", "w"), "cmix.v", (cfg.d_ff, d))
+        add(("layers", "cm", "r", "w"), "cmix.r", (d, d))
+    elif cfg.arch_kind == "zamba":
+        mb = _mamba_geometry(cfg)
+        add(("mamba_groups", "mamba", "in_proj", "w"), "mamba.in",
+            (d, mb.in_dim))
+        add(("mamba_groups", "mamba", "out_proj", "w"), "mamba.out",
+            (mb.d_inner, d))
+        add_attn(("shared", "attn"), "attn")
+        add_ffn(("shared", "ffn"), "ffn")
+    elif cfg.arch_kind == "encdec":
+        add_attn(("encoder", "attn"), "enc")
+        add_attn(("decoder", "self"), "dec")
+        add_attn(("decoder", "cross"), "xattn")
+        add_ffn(("encoder", "ffn"), "ffn")
+        add_ffn(("decoder", "ffn"), "ffn")
+    return tuple(slots)
+
+
+@functools.lru_cache(maxsize=128)
+def slot_assignments(cfg: ArchConfig) -> Dict[tuple, POL.SlotAssignment]:
+    """Policy resolution for a config: param-leaf path -> SlotAssignment.
+
+    This is THE source of truth for which slots are hashed and how —
+    plan factories, the artifact subsystem, the compression report, and
+    the budget solver all read it.  Cached: resolution walks every rule
+    for every slot and may run the budget solver.
+    """
+    return POL.resolve(POL.effective(cfg), hash_slots(cfg))
 
 
 def bank_spec_map(cfg: ArchConfig) -> Dict[tuple, H.HashedSpec]:
     """Map param-leaf paths -> HashedSpec for every hashed bank in a model.
 
-    Keys are the nested-dict key tuples of ``model.init`` params (layer
-    stacking adds a leading array axis, never a path component).  This is
+    Keys are the nested-dict key tuples of ``model.init`` params.  This is
     the ground truth the artifact subsystem serializes: bank leaves carry
     their spec in the header so the virtual matrix is reconstructible from
-    the file alone.  Kept next to the plan factories so a new projection
-    slot can't silently miss the map.
+    the file alone.
     """
-    out: Dict[tuple, H.HashedSpec] = {}
-    if not cfg.hashed:
-        return out
+    return {path: a.spec for path, a in slot_assignments(cfg).items()
+            if a.spec is not None}
 
-    def add(base: tuple, **named_specs):
-        for name, spec in named_specs.items():
-            if spec is not None:
-                out[base + (name, "w")] = spec
 
-    def add_attn(base: tuple, plan):
-        add(base, q=plan.hash_q, k=plan.hash_k, v=plan.hash_v, o=plan.hash_o)
-
-    def add_ffn(base: tuple, plan):
-        add(base, **{"in": plan.hash_in, "gate": plan.hash_gate,
-                     "out": plan.hash_out})
-
-    # every arch kind embeds through _emb_plan: a hashed embedding bank
-    # exists whenever hash_embeddings is on, regardless of kind
-    ep = _emb_plan(cfg)
-    if ep.hashed is not None:
-        out[("embed", "emb")] = ep.hashed
-
-    if cfg.arch_kind == "decoder":
-        add_attn(("layers", "attn"), _attn_plan(cfg))
-        if cfg.moe:
-            # MoE expert banks sit directly under their name (no "w" leaf)
-            mp = _moe_plan(cfg)
-            for name, spec in (("in", mp.hash_in), ("gate", mp.hash_gate),
-                               ("out", mp.hash_out)):
-                if spec is not None:
-                    out[("layers", "moe", name)] = spec
-        else:
-            add_ffn(("layers", "ffn"), _ffn_plan(cfg))
-        if cfg.hash_embeddings and not cfg.tie_embeddings:
-            # only the decoder builder hashes its untied lm_head
-            out[("lm_head", "w")] = _hspec(
-                cfg, "lm_head", (cfg.d_model, cfg.padded_vocab))
-    elif cfg.arch_kind == "rwkv":
-        tm = _rwkv_plan(cfg)
-        add(("layers", "tm"), r=tm.hash_r, k=tm.hash_k, v=tm.hash_v,
-            g=tm.hash_g, o=tm.hash_o)
-        cm = _cmix_plan(cfg)
-        add(("layers", "cm"), k=cm.hash_k, v=cm.hash_v, r=cm.hash_r)
-    elif cfg.arch_kind == "zamba":
-        mb = _mamba_plan(cfg)
-        add(("mamba_groups", "mamba"),
-            in_proj=mb.hash_in, out_proj=mb.hash_out)
-        add_attn(("shared", "attn"), _attn_plan(cfg))
-        add_ffn(("shared", "ffn"), _ffn_plan(cfg))
-    elif cfg.arch_kind == "encdec":
-        add_attn(("encoder", "attn"),
-                 _attn_plan(cfg, causal=False, use_rope=False, prefix="enc"))
-        add_attn(("decoder", "self"),
-                 _attn_plan(cfg, causal=True, use_rope=False, prefix="dec"))
-        add_attn(("decoder", "cross"),
-                 _attn_plan(cfg, cross=True, causal=False, use_rope=False,
-                            prefix="xattn"))
-        fp = _ffn_plan(cfg)
-        add_ffn(("encoder", "ffn"), fp)
-        add_ffn(("decoder", "ffn"), fp)
-    return out
+def _slot_spec(cfg: ArchConfig, path: tuple) -> Optional[H.HashedSpec]:
+    a = slot_assignments(cfg).get(tuple(path))
+    return a.spec if a is not None else None
 
 
 # ---------------------------------------------------------------------------
@@ -176,90 +201,99 @@ def _dtype(cfg):
     return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
 
 
-def _attn_plan(cfg: ArchConfig, cross=False, causal=True, use_rope=True,
-               prefix="attn") -> ATT.AttentionPlan:
-    d = cfg.d_model
+def _attn_plan(cfg: ArchConfig, base=("layers", "attn"), cross=False,
+               causal=True, use_rope=True) -> ATT.AttentionPlan:
+    sp = functools.partial(_slot_spec, cfg)
     return ATT.AttentionPlan(
-        d_model=d, num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+        d_model=cfg.d_model, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads,
         head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
         use_rope=use_rope, qk_norm=cfg.qk_norm,
         sliding_window=cfg.sliding_window, causal=causal, cross=cross,
         dtype=_dtype(cfg),
-        hash_q=_hspec(cfg, f"{prefix}.q", (d, cfg.num_heads * cfg.head_dim)),
-        hash_k=_hspec(cfg, f"{prefix}.k", (d, cfg.num_kv_heads * cfg.head_dim)),
-        hash_v=_hspec(cfg, f"{prefix}.v", (d, cfg.num_kv_heads * cfg.head_dim)),
-        hash_o=_hspec(cfg, f"{prefix}.o", (cfg.num_heads * cfg.head_dim, d)),
+        hash_q=sp(base + ("q", "w")),
+        hash_k=sp(base + ("k", "w")),
+        hash_v=sp(base + ("v", "w")),
+        hash_o=sp(base + ("o", "w")),
         hash_path=cfg.hash_path,
     )
 
 
-def _ffn_plan(cfg: ArchConfig, prefix="ffn") -> FFN.FFNPlan:
-    d, f = cfg.d_model, cfg.d_ff
+def _ffn_plan(cfg: ArchConfig, base=("layers", "ffn")) -> FFN.FFNPlan:
+    sp = functools.partial(_slot_spec, cfg)
     return FFN.FFNPlan(
-        d_model=d, d_ff=f, activation=cfg.activation, dtype=_dtype(cfg),
-        hash_in=_hspec(cfg, f"{prefix}.in", (d, f)),
-        hash_gate=_hspec(cfg, f"{prefix}.gate", (d, f)),
-        hash_out=_hspec(cfg, f"{prefix}.out", (f, d)),
+        d_model=cfg.d_model, d_ff=cfg.d_ff, activation=cfg.activation,
+        dtype=_dtype(cfg),
+        hash_in=sp(base + ("in", "w")),
+        hash_gate=sp(base + ("gate", "w")),
+        hash_out=sp(base + ("out", "w")),
         hash_path=cfg.hash_path,
     )
 
 
-def _moe_plan(cfg: ArchConfig) -> MOE.MoEPlan:
-    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+def _moe_plan(cfg: ArchConfig, base=("layers", "moe")) -> MOE.MoEPlan:
+    sp = functools.partial(_slot_spec, cfg)
     return MOE.MoEPlan(
-        d_model=d, d_ff=f, num_experts=e, top_k=cfg.top_k,
+        d_model=cfg.d_model, d_ff=cfg.moe_d_ff,
+        num_experts=cfg.num_experts, top_k=cfg.top_k,
         activation=cfg.activation, capacity_factor=cfg.capacity_factor,
         dtype=_dtype(cfg),
-        hash_in=_hspec(cfg, "moe.in", (e * d, f)),
-        hash_gate=_hspec(cfg, "moe.gate", (e * d, f)),
-        hash_out=_hspec(cfg, "moe.out", (e * f, d)),
+        hash_in=sp(base + ("in",)),
+        hash_gate=sp(base + ("gate",)),
+        hash_out=sp(base + ("out",)),
     )
 
 
-def _mamba_plan(cfg: ArchConfig) -> MB.Mamba2Plan:
-    d = cfg.d_model
-    plan = MB.Mamba2Plan(d_model=d, d_state=cfg.ssm_state,
+def _mamba_geometry(cfg: ArchConfig) -> MB.Mamba2Plan:
+    """Bare mamba plan (no hash fields): the single source of the
+    projection geometry (in_dim/d_inner) for both the slot inventory and
+    the full plan."""
+    return MB.Mamba2Plan(d_model=cfg.d_model, d_state=cfg.ssm_state,
                          head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
                          dtype=_dtype(cfg))
+
+
+def _mamba_plan(cfg: ArchConfig,
+                base=("mamba_groups", "mamba")) -> MB.Mamba2Plan:
+    sp = functools.partial(_slot_spec, cfg)
     return dataclasses.replace(
-        plan,
-        hash_in=_hspec(cfg, "mamba.in", (d, plan.in_dim)),
-        hash_out=_hspec(cfg, "mamba.out", (plan.d_inner, d)),
+        _mamba_geometry(cfg),
+        hash_in=sp(base + ("in_proj", "w")),
+        hash_out=sp(base + ("out_proj", "w")),
         hash_path=cfg.hash_path,
     )
 
 
-def _rwkv_plan(cfg: ArchConfig) -> RW.RWKV6Plan:
+def _rwkv_plan(cfg: ArchConfig, base=("layers", "tm")) -> RW.RWKV6Plan:
     d = cfg.d_model
+    sp = functools.partial(_slot_spec, cfg)
     return RW.RWKV6Plan(
         d_model=d, head_dim=cfg.head_dim, dtype=_dtype(cfg),
         lora_dim=min(32, max(4, d // 128)),
         decay_lora_dim=min(64, max(4, d // 64)),
-        hash_r=_hspec(cfg, "rwkv.r", (d, d)),
-        hash_k=_hspec(cfg, "rwkv.k", (d, d)),
-        hash_v=_hspec(cfg, "rwkv.v", (d, d)),
-        hash_g=_hspec(cfg, "rwkv.g", (d, d)),
-        hash_o=_hspec(cfg, "rwkv.o", (d, d)),
+        hash_r=sp(base + ("r", "w")),
+        hash_k=sp(base + ("k", "w")),
+        hash_v=sp(base + ("v", "w")),
+        hash_g=sp(base + ("g", "w")),
+        hash_o=sp(base + ("o", "w")),
         hash_path=cfg.hash_path,
     )
 
 
-def _cmix_plan(cfg: ArchConfig) -> RW.ChannelMixPlan:
-    d, f = cfg.d_model, cfg.d_ff
+def _cmix_plan(cfg: ArchConfig, base=("layers", "cm")) -> RW.ChannelMixPlan:
+    sp = functools.partial(_slot_spec, cfg)
     return RW.ChannelMixPlan(
-        d_model=d, d_ff=f, dtype=_dtype(cfg),
-        hash_k=_hspec(cfg, "cmix.k", (d, f)),
-        hash_v=_hspec(cfg, "cmix.v", (f, d)),
-        hash_r=_hspec(cfg, "cmix.r", (d, d)),
+        d_model=cfg.d_model, d_ff=cfg.d_ff, dtype=_dtype(cfg),
+        hash_k=sp(base + ("k", "w")),
+        hash_v=sp(base + ("v", "w")),
+        hash_r=sp(base + ("r", "w")),
         hash_path=cfg.hash_path,
     )
 
 
 def _emb_plan(cfg: ArchConfig) -> L.EmbeddingPlan:
-    hs = None
-    if cfg.hashed and cfg.hash_embeddings:
-        hs = _hspec(cfg, "embed", (cfg.padded_vocab, cfg.d_model))
-    return L.EmbeddingPlan(cfg.padded_vocab, cfg.d_model, hashed=hs,
+    return L.EmbeddingPlan(cfg.padded_vocab, cfg.d_model,
+                           hashed=_slot_spec(cfg, ("embed", "emb")),
                            dtype=_dtype(cfg),
                            scale_by_sqrt_dim=cfg.scale_embeddings)
 
@@ -337,9 +371,7 @@ def _build_decoder(cfg: ArchConfig) -> Model:
         if not cfg.tie_embeddings:
             p, s = L.linear_init(
                 L.LinearPlan(cfg.d_model, cfg.padded_vocab,
-                             hashed=(_hspec(cfg, "lm_head",
-                                            (cfg.d_model, cfg.padded_vocab))
-                                     if cfg.hash_embeddings else None),
+                             hashed=_slot_spec(cfg, ("lm_head", "w")),
                              pspec=(L.FSDP, L.TP), dtype=dt), khead)
             params["lm_head"], specs["lm_head"] = p, s
         if spec_cell is not None:
@@ -373,9 +405,8 @@ def _build_decoder(cfg: ArchConfig) -> Model:
             return L.embedding_logits(emb_plan, params["embed"], x)
         return L.linear_apply(
             L.LinearPlan(cfg.d_model, cfg.padded_vocab, dtype=dt,
-                         hashed=(_hspec(cfg, "lm_head",
-                                        (cfg.d_model, cfg.padded_vocab))
-                                 if cfg.hash_embeddings else None)),
+                         hashed=_slot_spec(cfg, ("lm_head", "w")),
+                         hash_path=cfg.hash_path),
             params["lm_head"], x)
 
     def train_loss(params, batch):
@@ -605,8 +636,8 @@ def _build_rwkv(cfg: ArchConfig) -> Model:
 def _build_zamba(cfg: ArchConfig) -> Model:
     dt = _dtype(cfg)
     mb_plan = _mamba_plan(cfg)
-    attn_plan = _attn_plan(cfg)
-    ffn_plan = _ffn_plan(cfg)
+    attn_plan = _attn_plan(cfg, base=("shared", "attn"))
+    ffn_plan = _ffn_plan(cfg, base=("shared", "ffn"))
     emb_plan = _emb_plan(cfg)
     norm_init, norm_apply = _norm_fns(cfg)
     group = cfg.hybrid_group
@@ -793,11 +824,16 @@ def _build_zamba(cfg: ArchConfig) -> Model:
 
 def _build_encdec(cfg: ArchConfig) -> Model:
     dt = _dtype(cfg)
-    enc_attn = _attn_plan(cfg, causal=False, use_rope=False, prefix="enc")
-    self_attn = _attn_plan(cfg, causal=True, use_rope=False, prefix="dec")
-    cross_attn = _attn_plan(cfg, cross=True, causal=False, use_rope=False,
-                            prefix="xattn")
-    ffn_plan = _ffn_plan(cfg)
+    enc_attn = _attn_plan(cfg, base=("encoder", "attn"), causal=False,
+                          use_rope=False)
+    self_attn = _attn_plan(cfg, base=("decoder", "self"), causal=True,
+                           use_rope=False)
+    cross_attn = _attn_plan(cfg, base=("decoder", "cross"), cross=True,
+                            causal=False, use_rope=False)
+    # encoder/decoder FFNs share seed keys (one historical plan) but are
+    # separate slots: a policy may compress them differently
+    enc_ffn = _ffn_plan(cfg, base=("encoder", "ffn"))
+    dec_ffn = _ffn_plan(cfg, base=("decoder", "ffn"))
     emb_plan = _emb_plan(cfg)
     norm_init, norm_apply = _norm_fns(cfg)
     nl, ne = cfg.num_layers, cfg.encoder_layers
@@ -806,7 +842,7 @@ def _build_encdec(cfg: ArchConfig) -> Model:
         ks = jax.random.split(key, 2)
         params, specs = {}, {}
         params["attn"], specs["attn"] = ATT.init(enc_attn, ks[0])
-        params["ffn"], specs["ffn"] = FFN.init(ffn_plan, ks[1])
+        params["ffn"], specs["ffn"] = FFN.init(enc_ffn, ks[1])
         params["ln1"], specs["ln1"] = norm_init()
         params["ln2"], specs["ln2"] = norm_init()
         return params, specs
@@ -816,7 +852,7 @@ def _build_encdec(cfg: ArchConfig) -> Model:
         params, specs = {}, {}
         params["self"], specs["self"] = ATT.init(self_attn, ks[0])
         params["cross"], specs["cross"] = ATT.init(cross_attn, ks[1])
-        params["ffn"], specs["ffn"] = FFN.init(ffn_plan, ks[2])
+        params["ffn"], specs["ffn"] = FFN.init(dec_ffn, ks[2])
         params["ln1"], specs["ln1"] = norm_init()
         params["ln2"], specs["ln2"] = norm_init()
         params["ln3"], specs["ln3"] = norm_init()
@@ -855,7 +891,7 @@ def _build_encdec(cfg: ArchConfig) -> Model:
                                  positions=positions)
                 x = x + a
                 h = norm_apply(lp["ln2"], x)
-                return x + FFN.apply(ffn_plan, lp["ffn"], h), None
+                return x + FFN.apply(enc_ffn, lp["ffn"], h), None
 
             if cfg.remat:
                 inner = jax.checkpoint(inner)
@@ -875,7 +911,7 @@ def _build_encdec(cfg: ArchConfig) -> Model:
                          kv_source=enc_out)
         x = x + a
         h = norm_apply(lp["ln3"], x)
-        x = shd.constraint(x + FFN.apply(ffn_plan, lp["ffn"], h),
+        x = shd.constraint(x + FFN.apply(dec_ffn, lp["ffn"], h),
                            P(L.BATCH, None, None))
         return x, new_kv
 

@@ -63,15 +63,37 @@ def accum_einsum(eq: str, a, b):
 
 
 
+def _bank_shard_grid() -> int:
+    """How many ways a bank's leading dim must divide to shard over both
+    mesh axes.  Derived from the ACTIVE mesh (launchers wrap spec
+    construction in ``sharding.use_mesh``) so a small mesh — a (1,1) CI
+    run, an elastic (8,16) restart — shards banks it can instead of
+    replicating them; without an active mesh, fall back to the production
+    256-chip grid."""
+    from repro.distributed import sharding as shd
+    mesh = shd.active_mesh()
+    if mesh is None:
+        return 256
+    axes = shd.resolve_spec(P((FSDP, TP)))[0]
+    if axes is None:
+        return 1
+    if not isinstance(axes, (tuple, list)):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
 def bank_pspec(spec) -> P:
     """Sharding for a hashed bank: over BOTH mesh axes when the leading
-    dim divides the full 256-shard grid, else replicated (small banks,
-    paper-scale MLPs).  A bank replicated over model made per-device
-    hashed state 2x the DENSE state at 405B scale (EXPERIMENTS.md §Perf);
-    decompression all-gathers the (c-times smaller) bank — the FSDP wire
-    win of the technique."""
+    dim divides the shard grid (see :func:`_bank_shard_grid`), else
+    replicated (small banks, paper-scale MLPs).  A bank replicated over
+    model made per-device hashed state 2x the DENSE state at 405B scale
+    (EXPERIMENTS.md §Perf); decompression all-gathers the (c-times
+    smaller) bank — the FSDP wire win of the technique."""
     n0 = spec.real_param_shape()[0]
-    sharded = n0 % 256 == 0
+    sharded = n0 % _bank_shard_grid() == 0
     if spec.mode == "element":
         return P((FSDP, TP)) if sharded else P(None)
     return P((FSDP, TP), None, None) if sharded else P(None, None, None)
@@ -107,7 +129,10 @@ def linear_init(plan: LinearPlan, key):
 def linear_apply(plan: LinearPlan, params, x):
     w = params["w"]
     if plan.hashed is not None:
-        return H.matmul(x, w, plan.hashed, path=plan.hash_path,
+        # policy-resolved specs carry their own per-slot execution path;
+        # hand-built specs (exec_path "") fall back to the plan's
+        return H.matmul(x, w, plan.hashed,
+                        path=plan.hashed.exec_path or plan.hash_path,
                         dtype=x.dtype, vspec=P(*plan.pspec))
     # native-dtype output (bf16): the MXU accumulates f32 internally
     # regardless; emitting f32 + astype(bf16) would make every backward

@@ -110,9 +110,16 @@ def artifact_exporter(cfg, artifact_dir: str,
         art.export_model(path, cfg, state["params"],
                          meta={"step": step, "checkpoint": final_path})
         if registry_root:
+            from repro import policy as pol
             from repro.artifact import registry as reg
+            meta = {"step": step}
+            if getattr(cfg, "hash_policy", None) is not None:
+                # policy rides the registry entry so a deployment can see
+                # how the model's storage budget was allocated without
+                # opening the artifact
+                meta["hash_policy"] = pol.policy_to_dict(cfg.hash_policy)
             reg.register(registry_root, model_name or cfg.name, path,
-                         metadata={"step": step})
+                         metadata=meta)
         if keep > 0:
             old = sorted(f for f in os.listdir(artifact_dir)
                          if f.startswith("model_")

@@ -2,6 +2,7 @@
 quantization tolerance, registry integrity, report accounting, the
 checkpoint export hook, and the serving-engine fixes that ride this PR
 (per-request prefill temperature, bucketed static-shape prefill)."""
+import dataclasses
 import json
 import os
 
@@ -74,6 +75,25 @@ def test_spec_dict_defaults_forward_compat():
     assert s.panel_cols == 0 and s.use_sign
 
 
+def test_spec_dict_roundtrip_non_default_sign_and_panels():
+    """Non-default use_sign/panel_cols must survive the JSON round-trip
+    exactly (a dropped sign flag would silently flip weight sharing)."""
+    spec = HashedSpec((96, 160), 0.25, mode="element", seed=77,
+                      panel_cols=32, use_sign=False)
+    d = spec_to_dict(spec)
+    assert d["use_sign"] is False and d["panel_cols"] == 32
+    back = spec_from_dict(json.loads(json.dumps(d)))
+    assert back == spec
+    assert back.use_sign is False and back.panel_cols == 32
+    assert back.n_panels == spec.n_panels == 5
+    assert back.num_buckets == spec.num_buckets
+    # and the sign flag actually changes materialization
+    signed = dataclasses.replace(spec, use_sign=True)
+    w = init(jax.random.PRNGKey(0), spec)
+    assert not np.array_equal(np.asarray(hashed.materialize(w, spec)),
+                              np.asarray(hashed.materialize(w, signed)))
+
+
 # ---------------------------------------------------------------------------
 # ragged block grids
 # ---------------------------------------------------------------------------
@@ -92,6 +112,33 @@ def test_materialize_rows_block_ragged_cols():
     # batched row_ids shape
     got2 = hashed.materialize_rows(w, spec, row_ids.reshape(2, 2))
     assert got2.shape == (2, 2, 40)
+
+
+def test_materialize_rows_block_ragged_rows():
+    """rows not a multiple of block_rows: the last tile-row is partial;
+    row gathers near and past the boundary must match materialize()."""
+    spec = HashedSpec((40, 32), 0.5, mode="block", seed=11,
+                      block_shape=(16, 16))
+    w = init(jax.random.PRNGKey(3), spec)
+    v = hashed.materialize(w, spec)
+    assert v.shape == (40, 32)
+    # last full-tile row, first ragged-tile row, final row
+    row_ids = jnp.asarray([0, 15, 16, 31, 32, 39])
+    got = hashed.materialize_rows(w, spec, row_ids)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(v)[np.asarray(row_ids)],
+                               rtol=1e-6, atol=1e-6)
+    # ragged rows AND cols together, batched id shape
+    spec2 = HashedSpec((40, 24), 0.5, mode="block", seed=12,
+                       block_shape=(16, 16))
+    w2 = init(jax.random.PRNGKey(4), spec2)
+    v2 = hashed.materialize(w2, spec2)
+    ids = jnp.asarray([[3, 39], [17, 20]])
+    got2 = hashed.materialize_rows(w2, spec2, ids)
+    assert got2.shape == (2, 2, 24)
+    np.testing.assert_allclose(
+        np.asarray(got2),
+        np.asarray(v2)[np.asarray(ids)], rtol=1e-6, atol=1e-6)
 
 
 def test_matmul_scan_block_ragged_rows_and_cols():
