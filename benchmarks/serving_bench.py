@@ -1,0 +1,118 @@
+"""Serving benchmark: continuous batching under increasing offered load.
+
+For one dense and one hashed config (reduced qwen), drives the paged
+continuous-batching engine at several concurrency levels and records
+
+- tokens/s (decode throughput over the whole run),
+- p50/p99 request latency (submit -> finish, includes queueing),
+- p50 time-to-first-token, preemptions, pages in flight,
+
+then writes ``BENCH_serving.json`` so the serving perf trajectory is
+tracked in CI next to the policy and artifact benches.  Requests arrive
+open-loop on a deterministic schedule (offered load ~ 2x what one row
+sustains, so queueing pressure grows with the request count, and p99
+spreads from p50 as concurrency saturates).
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.configs.reduced import reduced
+from repro.models import build
+from repro.serving.engine import Engine, Request
+from repro.serving.scheduler import SchedulerConfig
+
+
+def _configs():
+    base = reduced(C.get("qwen3-1.7b")).with_(dtype="float32")
+    return [("qwen3-reduced-dense", base),
+            ("qwen3-reduced-hashed", base.hashed_variant(0.125))]
+
+
+def _requests(n: int, vocab: int, max_new: int, arrival_gap_s: float):
+    rng = np.random.default_rng(0)
+    reqs = []
+    for uid in range(n):
+        plen = int(rng.integers(4, 24))
+        reqs.append((uid * arrival_gap_s, Request(
+            uid=uid,
+            prompt=rng.integers(2, vocab, size=plen).astype(np.int32),
+            max_new_tokens=max_new)))
+    return reqs
+
+
+def bench_level(model, params, cfg, *, concurrency: int, requests: int,
+                max_new: int, max_len: int, page_size: int) -> dict:
+    eng = Engine(model, params, max_concurrency=concurrency,
+                 max_len=max_len, eos_id=-1, page_size=page_size,
+                 scheduler=SchedulerConfig(max_queue=max(requests, 1)))
+    # warmup: compile prefill buckets + decode before the clock starts
+    eng.submit(Request(uid=-1, prompt=np.arange(5, dtype=np.int32) + 2,
+                       max_new_tokens=2))
+    eng.run()
+    eng._done.clear()
+
+    # offered load: one request per gap, ~2x one row's sustained rate
+    gap = 0.0 if requests <= concurrency else 0.01
+    schedule = _requests(requests, cfg.vocab_size, max_new, gap)
+    t0 = time.time()
+    pending = list(schedule)
+    while pending or len(eng.sched) or any(r is not None for r in eng.rows):
+        now = time.time() - t0
+        while pending and pending[0][0] <= now:
+            eng.submit(pending.pop(0)[1])
+        eng.step()
+    wall = time.time() - t0
+    stats = eng.stats()
+    total_tokens = stats.pop("tokens")
+    out = {"concurrency": concurrency, "requests": requests,
+           "tokens": total_tokens,
+           "wall_s": round(wall, 3),
+           "tok_per_s": round(total_tokens / wall, 2)}
+    out.update({k: round(v, 4) if isinstance(v, float) else v
+                for k, v in stats.items()})
+    return out
+
+
+def main(smoke: bool = False, out_json: str = "BENCH_serving.json") -> dict:
+    levels = (1, 2, 4) if smoke else (1, 4, 8)
+    requests = 6 if smoke else 24
+    max_new = 8 if smoke else 24
+    results = {"smoke": smoke, "levels": list(levels), "configs": []}
+    for tag, cfg in _configs():
+        model = build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rows = []
+        for c in levels:
+            r = bench_level(model, params, cfg, concurrency=c,
+                            requests=requests, max_new=max_new,
+                            max_len=128, page_size=16)
+            print(f"{tag} @ concurrency {c}: {r['tok_per_s']} tok/s, "
+                  f"p50 {r.get('latency_p50_s', '-')}s "
+                  f"p99 {r.get('latency_p99_s', '-')}s")
+            rows.append(r)
+        results["configs"].append({"name": tag,
+                                   "hashed": bool(cfg.hashed),
+                                   "levels": rows})
+    with open(out_json, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {os.path.abspath(out_json)}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    a = ap.parse_args()
+    main(smoke=a.smoke, out_json=a.out)

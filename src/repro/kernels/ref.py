@@ -1,10 +1,13 @@
-"""Pure-jnp oracles for the hashed decompress-GEMM kernels.
+"""Pure-jnp oracles for the hashed decompress-GEMM and paged-attention
+kernels.
 
-Each function materializes the virtual matrix explicitly and uses plain
-jnp dots — the ground truth every Pallas kernel is swept against.
+Each function materializes the implicit operand explicitly (the virtual
+matrix for hashed GEMMs, the gathered K/V for paged attention) and uses
+plain jnp ops — the ground truth every Pallas kernel is swept against.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import hashed
@@ -56,3 +59,40 @@ def hashed_dw_ref(x, g, spec: hashed.HashedSpec, dtype=jnp.float32):
     out = jnp.zeros((spec.bank_tiles, bm, bn), jnp.float32)
     out = out.at[idx.reshape(-1)].add(tiles.reshape(-1, bm, bn))
     return out.astype(dtype)
+
+
+def paged_attention_ref(q, pages_k, pages_v, page_table, lengths, window=0):
+    """Decode attention through a paged KV cache, gather-then-attend.
+
+    Same contract as kernels.paged_attention.paged_decode_attention:
+    q (B, Hq, D) rotated, scaled by 1/sqrt(D) here; pages_k/v (P, ps, Hkv, D);
+    page_table (B, MAXP) int32 (unused slots -> trash page 0); lengths
+    (B,) counts INCLUDING the current token; window 0 disables.
+
+    Materializes the per-row K/V by gathering the table — (B, MAXP*ps,
+    Hkv, D) lives in memory, which is exactly what the Pallas kernel's
+    online-softmax page walk avoids.
+    """
+    b, hq, d = q.shape
+    _, ps, n_kv, _ = pages_k.shape
+    g = hq // n_kv
+    k = jnp.take(pages_k, page_table, axis=0)       # (B, MAXP, ps, Hkv, D)
+    v = jnp.take(pages_v, page_table, axis=0)
+    t = page_table.shape[1] * ps
+    k = k.reshape(b, t, n_kv, d).astype(jnp.float32)
+    v = v.reshape(b, t, n_kv, d).astype(jnp.float32)
+    qg = q.reshape(b, n_kv, g, d).astype(jnp.float32) / (d ** 0.5)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, k,
+                        preferred_element_type=jnp.float32)
+    kv_pos = jnp.arange(t)[None, :]
+    valid = kv_pos < lengths[:, None]
+    window = jnp.asarray(window)
+    q_pos = (lengths - 1)[:, None]
+    valid = valid & jnp.where(window > 0, q_pos - kv_pos < window, True)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # a fully-masked row (idle decode slot, length 0) softmaxes to a
+    # uniform distribution over garbage; zero it instead
+    probs = jnp.where(valid[:, None, None, :], probs, 0.0)
+    out = jnp.einsum("bkgt,btkd->bkgd", probs, v)
+    return out.reshape(b, hq, d).astype(q.dtype)

@@ -48,7 +48,28 @@ def main() -> int:
                    help="equal-memory real-param target ratio "
                         "('0.125' or '1/8'; implies hashing)")
     p.add_argument("--requests", type=int, default=8)
-    p.add_argument("--slots", type=int, default=4)
+    p.add_argument("--slots", type=int, default=None,
+                   help="deprecated alias for --max-concurrency")
+    p.add_argument("--max-concurrency", type=int, default=None,
+                   help="decode batch width (rows admitted mid-flight)")
+    p.add_argument("--page-size", type=int, default=16,
+                   help="KV cache page size in tokens (paged decoders)")
+    p.add_argument("--num-pages", type=int, default=None,
+                   help="physical KV page pool size; default fully "
+                        "provisions every row, less oversubscribes "
+                        "(preemption absorbs overflow)")
+    p.add_argument("--scheduler", default="fifo",
+                   choices=("fifo", "priority"),
+                   help="admission policy (FIFO within priority class)")
+    p.add_argument("--queue-limit", type=int, default=256,
+                   help="bounded queue depth; submits beyond are refused")
+    p.add_argument("--deadline", type=float, default=None,
+                   help="max queue wait in seconds before a request "
+                        "expires unserved")
+    p.add_argument("--attn-impl", default="ref",
+                   choices=("ref", "pallas"),
+                   help="paged decode attention: gather oracle or the "
+                        "paged-gather Pallas kernel")
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--max-len", type=int, default=256)
     p.add_argument("--temperature", type=float, default=0.0)
@@ -60,6 +81,20 @@ def main() -> int:
     p.add_argument("--registry", default=None,
                    help="model registry root for --model-name")
     args = p.parse_args()
+
+    if args.slots is not None and args.max_concurrency is not None:
+        p.error("--slots is a deprecated alias for --max-concurrency; "
+                "pass one, not both")
+    concurrency = args.max_concurrency if args.max_concurrency is not None \
+        else (args.slots if args.slots is not None else 4)
+    from repro.serving.scheduler import SchedulerConfig
+    engine_kwargs = dict(
+        slots=concurrency, max_len=args.max_len, eos_id=-1,
+        page_size=args.page_size, num_pages=args.num_pages,
+        attn_impl=args.attn_impl,
+        scheduler=SchedulerConfig(policy=args.scheduler,
+                                  max_queue=args.queue_limit,
+                                  deadline_s=args.deadline))
 
     if args.artifact and args.model_name:
         p.error("--artifact and --model-name are mutually exclusive")
@@ -84,7 +119,7 @@ def main() -> int:
         eng = Engine.from_artifact(
             args.artifact or args.model_name,
             registry_root=args.registry if args.model_name else None,
-            slots=args.slots, max_len=args.max_len, eos_id=-1)
+            **engine_kwargs)
         cfg = eng.model.cfg
         print(f"cold start from artifact: {cfg.name} "
               f"({time.time() - t_load:.2f}s to params-on-device)")
@@ -116,8 +151,7 @@ def main() -> int:
                 args.ckpt_dir, {"params": params, "opt": None, "step": 0})
             params = state["params"]
             print(f"loaded params from {args.ckpt_dir}")
-        eng = Engine(model, params, slots=args.slots, max_len=args.max_len,
-                     eos_id=-1)
+        eng = Engine(model, params, **engine_kwargs)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -139,9 +173,11 @@ def main() -> int:
     total_tokens = sum(len(r.tokens) for r in done)
     for r in sorted(done, key=lambda r: r.uid):
         print(f"req {r.uid}: {r.tokens}")
-    print(json.dumps({"requests": len(done), "tokens": total_tokens,
-                      "wall_s": round(dt, 2),
-                      "tok_per_s": round(total_tokens / dt, 1)}))
+    summary = {"requests": len(done), "tokens": total_tokens,
+               "wall_s": round(dt, 2),
+               "tok_per_s": round(total_tokens / dt, 1)}
+    summary.update(eng.stats())
+    print(json.dumps(summary))
     return 0
 
 

@@ -48,6 +48,12 @@ class Model(NamedTuple):
     decode_step: Callable   # (params, tokens(B,1), cache) -> (logits, cache)
     init_cache: Callable    # (batch, max_len) -> cache
     cache_pspecs: Callable  # (batch, max_len) -> spec tree for cache
+    # paged-KV serving path (decoder kinds only; None elsewhere):
+    # init_paged_cache: (num_pages, page_size) -> {"k","v"} page pools
+    # decode_paged: (params, tokens(B,1), pages, page_table(B,MAXP),
+    #                lengths(B,), impl) -> (logits, pages)
+    init_paged_cache: Optional[Callable] = None
+    decode_paged: Optional[Callable] = None
 
 
 # ---------------------------------------------------------------------------
@@ -500,6 +506,42 @@ def _build_decoder(cfg: ArchConfig) -> Model:
         logits, cache = fwd_with_cache(params, x, cache, cache["index"])
         return logits, cache
 
+    def init_paged_cache(num_pages, page_size):
+        shape = (nl, num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+    def decode_paged(params, tokens, pages, page_table, lengths,
+                     impl="ref"):
+        """One continuous-batching decode step through the paged KV cache.
+
+        tokens (B, 1); pages {"k","v"} (nl, P, ps, n_kv, hd); page_table
+        (B, MAXP) int32 (unused slots -> trash page 0); lengths (B,)
+        int32 cached-token counts EXCLUDING the current token.  Layer
+        page pools ride the scan as xs/ys exactly like the dense cache.
+        """
+        x = L.embedding_lookup(emb_plan, params["embed"], tokens)
+        x = shd.constraint(x, P(L.BATCH, None, None))
+
+        def body(x, xs):
+            lp, glob, pk, pv = xs
+            h = norm_apply(lp["ln1"], x)
+            a, (nk, nv) = ATT.apply_paged(
+                attn_plan, lp["attn"], h, pages=(pk, pv),
+                page_table=page_table, lengths=lengths, is_global=glob,
+                impl=impl)
+            x = x + a
+            h = norm_apply(lp["ln2"], x)
+            if use_moe:
+                f, _ = MOE.apply(moe_plan, lp["moe"], h)
+            else:
+                f = FFN.apply(ffn_plan, lp["ffn"], h)
+            x = shd.constraint(x + f, P(L.BATCH, None, None))
+            return x, (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], is_global, pages["k"], pages["v"]))
+        return logits_fn(params, x), {"k": nk, "v": nv}
+
     def pspecs():
         cell = []
         jax.eval_shape(lambda k: build_params(k, cell),
@@ -507,7 +549,9 @@ def _build_decoder(cfg: ArchConfig) -> Model:
         return cell[0]
 
     return Model(cfg, lambda key: build_params(key), pspecs, train_loss,
-                 prefill, decode_step, init_cache, cache_pspecs)
+                 prefill, decode_step, init_cache, cache_pspecs,
+                 init_paged_cache=init_paged_cache,
+                 decode_paged=decode_paged)
 
 
 # ===========================================================================

@@ -238,6 +238,62 @@ def apply(plan: AttentionPlan, params, x, *, positions, cache=None,
     return L.linear_apply(o_lin, params["o"], out), new_cache
 
 
+def apply_paged(plan: AttentionPlan, params, x, *, pages, page_table,
+                lengths, is_global=None, impl: str = "ref"):
+    """One decode step (S=1) through a paged KV cache.
+
+    x: (B, 1, d_model); pages: (pk, pv) each (P, ps, Hkv, D);
+    page_table: (B, MAXP) int32; lengths: (B,) int32 — tokens already
+    cached per row EXCLUDING the current one (so the current token's
+    position is ``lengths`` and its k/v lands at page
+    ``table[b, lengths // ps]`` offset ``lengths % ps``).
+
+    Returns (out (B, 1, d_model), (new_pk, new_pv)).  impl: "ref"
+    (gather-then-attend oracle) or "pallas" (paged-gather flash-decode
+    kernel; interpret mode off-TPU).
+    """
+    from repro.kernels import paged_attention as PA
+    from repro.kernels import ref as KREF
+
+    b = x.shape[0]
+    q = _project(plan, params, "q", x, plan.num_heads)
+    k = _project(plan, params, "k", x, plan.num_kv_heads)
+    v = _project(plan, params, "v", x, plan.num_kv_heads)
+    if plan.qk_norm:
+        q = L.rmsnorm_apply(params["q_norm"], q)
+        k = L.rmsnorm_apply(params["k_norm"], k)
+    positions = lengths[:, None]                      # (B, 1)
+    if plan.use_rope:
+        q = L.rope(q, positions, plan.rope_theta)
+        k = L.rope(k, positions, plan.rope_theta)
+
+    pk, pv = pages
+    ps = pk.shape[1]
+    pidx = jnp.take_along_axis(page_table, (lengths // ps)[:, None],
+                               axis=1)[:, 0]
+    poff = lengths % ps
+    # distinct live rows own distinct pages (allocator invariant); idle
+    # rows all write the trash page, where collisions are harmless
+    pk = pk.at[pidx, poff].set(k[:, 0].astype(pk.dtype))
+    pv = pv.at[pidx, poff].set(v[:, 0].astype(pv.dtype))
+
+    if plan.sliding_window > 0:
+        window = jnp.asarray(plan.sliding_window, jnp.int32)
+        if is_global is not None:
+            window = jnp.where(is_global, 0, window)
+    else:
+        window = jnp.asarray(0, jnp.int32)
+
+    fn = PA.paged_decode_attention if impl == "pallas" \
+        else KREF.paged_attention_ref
+    out = fn(q[:, 0], pk, pv, page_table, lengths + 1, window)
+    out = out.reshape(b, 1, plan.q_dim).astype(plan.dtype)
+
+    o_lin = _lin(plan, plan.q_dim, plan.d_model, plan.hash_o,
+                 (L.TP, L.FSDP))
+    return L.linear_apply(o_lin, params["o"], out), (pk, pv)
+
+
 def init_cache(plan: AttentionPlan, batch: int, max_len: int,
                dtype=jnp.bfloat16):
     shape = (batch, max_len, plan.num_kv_heads, plan.head_dim)

@@ -1,33 +1,47 @@
-"""Batched serving engine: continuous-batching prefill/decode over a
-fixed-slot KV cache.
+"""Continuous-batching serving engine over a paged KV cache.
 
 Design (vLLM-style, adapted to XLA's static-shape world):
 
-- ``slots`` fixed decode batch; each slot holds one active sequence.
-- Requests queue up; free slots are filled by *prefill* (one sequence at a
-  time, written into the slot's cache region), decode advances ALL slots
-  in lockstep with a single ``decode_step`` (B = n_slots, S = 1).
-- Finished sequences (EOS or max_len) free their slot immediately
-  (continuous batching — no head-of-line blocking on long generations).
-- Per-slot cache layout: the model's init_cache(batch=slots) pytree;
-  prefill writes through a batch=1 cache then scatters into the slot.
+- A fixed decode batch of ``max_concurrency`` *rows*; each row holds one
+  active sequence at its own position (per-row positions ride into the
+  model, so rows of different lengths share one ``decode_step``).
+- Decoder-kind models use the **paged backend**: K/V lives in fixed-size
+  pages (`repro.serving.paged_cache`), rows hold page lists instead of a
+  ``max_len`` reservation, and decode reads K/V through the page table
+  (`kernels/paged_attention`, ref fallback in `kernels/ref`).  When the
+  pool is oversubscribed and a row needs a page none are free, the
+  youngest active row is preempted — its pages are released and it
+  re-enters the queue head to be re-prefilled later (greedy decode is
+  reproducible across preemption; sampled decode draws fresh
+  randomness).
+- Recurrent / encoder-decoder kinds (rwkv, zamba, encdec) keep the
+  dense fixed-row cache (recurrent state is O(1) per row; paging buys
+  nothing there).
+- Admission/retirement happen *mid-flight*, every tick: a scheduler
+  (`repro.serving.scheduler`) with a bounded queue (backpressure:
+  ``submit`` returns False when full), FIFO-within-priority-class
+  ordering, optional queue deadlines, and a prefill/decode interleaving
+  knob decides who prefills next.  Finished rows free immediately — no
+  head-of-line blocking on long generations.
 
-Sampling: greedy or temperature top-k, fp32 logits.
-
-All jitted functions are donate-free and cache-functional (cache in,
-cache out) so the same engine code runs under pjit on a mesh.
+Prefill is bucketed pad-and-mask (one compile per 64-bucket) for pure
+decoders; sampling is greedy or temperature, fp32 logits.  All jitted
+functions are cache-functional (cache in, cache out) so the same engine
+code runs under pjit on a mesh.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
+from repro.serving.paged_cache import PagedKVCache
+from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 
 @dataclasses.dataclass
@@ -36,16 +50,18 @@ class Request:
     prompt: np.ndarray                  # (P,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0            # 0 => greedy
+    priority: int = 0                   # lower = more urgent
     # filled by the engine
     tokens: Optional[List[int]] = None
     done: bool = False
     extras: Optional[Dict[str, Any]] = None   # frames / image_embeds
-
-
-@dataclasses.dataclass
-class _Slot:
-    req: Optional[Request] = None
-    pos: int = 0
+    status: str = "new"       # queued/running/preempted/done/rejected/expired
+    submit_time: Optional[float] = None
+    first_admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    preemptions: int = 0
+    truncated: bool = False             # force-retired at max_len
 
 
 def _slot_update(cache, slot_cache, slot_idx):
@@ -67,36 +83,113 @@ def _slot_update(cache, slot_cache, slot_idx):
     return jax.tree.map(upd, cache, slot_cache)
 
 
+def _copy_pages(pages, ck, cv, pids):
+    """Scatter a prefilled row's K/V into its pages, one jitted call.
+
+    ck/cv: (nl, 1, max_len, n_kv, hd) from the batch=1 prefill cache;
+    pages: {"k","v"} (nl, P, ps, n_kv, hd); pids: (MAXP,) int32 — the
+    row's page-table row (logical page j -> physical page pids[j];
+    unused slots hold the trash page, whose contents are never read, so
+    the loop writes all MAXP slots unconditionally).  The fori_loop
+    carries the pools, so XLA bufferizes the updates in place — one
+    pool rewrite per prefill instead of one per page.
+    """
+    nl, _, _, hkv, hd = ck.shape
+    ps = pages["k"].shape[2]
+
+    def body(j, pools):
+        pk, pv = pools
+        src = jnp.minimum(j * ps, ck.shape[2] - ps)
+        chunk_k = jax.lax.dynamic_slice(ck, (0, 0, src, 0, 0),
+                                        (nl, 1, ps, hkv, hd))
+        chunk_v = jax.lax.dynamic_slice(cv, (0, 0, src, 0, 0),
+                                        (nl, 1, ps, hkv, hd))
+        pk = jax.lax.dynamic_update_slice(
+            pk, chunk_k.astype(pk.dtype), (0, pids[j], 0, 0, 0))
+        pv = jax.lax.dynamic_update_slice(
+            pv, chunk_v.astype(pv.dtype), (0, pids[j], 0, 0, 0))
+        return pk, pv
+
+    pk, pv = jax.lax.fori_loop(0, pids.shape[0], body,
+                               (pages["k"], pages["v"]))
+    return {"k": pk, "v": pv}
+
+
 class Engine:
+    BUCKET = 64
+
     def __init__(self, model: Model, params, slots: int = 4,
-                 max_len: int = 512, eos_id: int = 1, seed: int = 0):
+                 max_len: int = 512, eos_id: int = 1, seed: int = 0, *,
+                 max_concurrency: Optional[int] = None,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 scheduler: Optional[SchedulerConfig] = None,
+                 attn_impl: str = "ref", paged: Optional[bool] = None):
+        """max_concurrency (alias: slots) fixes the decode batch width.
+
+        Paged knobs (decoder kinds): ``page_size`` tokens per KV page;
+        ``num_pages`` sizes the physical pool — default fully provisions
+        every row to max_len (no preemption possible); pass less to
+        oversubscribe memory and let preemption absorb the overflow.
+        ``attn_impl``: "ref" (gather oracle) or "pallas" (paged-gather
+        flash-decode kernel; interpret mode off-TPU).
+        """
         self.model = model
         self.params = params
-        self.slots = [_Slot() for _ in range(slots)]
-        self.n_slots = slots
-        self.max_len = max_len
+        rows = max_concurrency if max_concurrency is not None else slots
+        self.n_rows = rows
         self.eos_id = eos_id
-        self.cache = model.init_cache(slots, max_len)
-        # per-slot write positions: every slot decodes at its own index
-        # (true continuous batching); supported by decoder/zamba/rwkv
-        # kinds.  encdec keeps the scalar index (synchronous waves).
-        self.per_row = model.cfg.arch_kind in ("decoder", "zamba", "rwkv")
-        if self.per_row:
-            self.cache["index"] = jnp.zeros((slots,), jnp.int32)
+        self.paged = (model.decode_paged is not None) if paged is None \
+            else paged
+        if self.paged and model.decode_paged is None:
+            raise ValueError(
+                f"arch kind {model.cfg.arch_kind!r} has no paged decode")
+        self.sched = Scheduler(scheduler or SchedulerConfig())
+        self.rows: List[Optional[Request]] = [None] * rows
+        self._row_seq = [0] * rows      # admission order, for preemption
+        self._seq = 0
         self._key = jax.random.PRNGKey(seed)
-        self._queue: List[Request] = []
         self._done: List[Request] = []
-        self._tokens = np.zeros((slots, 1), np.int32)
-
+        self._failed: List[Request] = []
+        self._tokens = np.zeros((rows, 1), np.int32)
         self._prefill = jax.jit(model.prefill)
-        self._decode = jax.jit(model.decode_step)
+
+        if self.paged:
+            # page-aligned max_len keeps every prefill page copy in
+            # bounds (dynamic_slice clamping would silently shift rows)
+            self.max_len = -(-max_len // page_size) * page_size
+            maxp = self.max_len // page_size
+            if num_pages is None:
+                num_pages = rows * maxp + 1          # +1: trash page
+            self.kv = PagedKVCache(num_pages, page_size, rows, maxp)
+            self.pages = model.init_paged_cache(num_pages, page_size)
+            self._prefill_cache = model.init_cache(1, self.max_len)
+            # donate the page pools: without donation the functional
+            # pages-in/pages-out contract would copy the whole pool per
+            # decode tick / prefill (backends that can't donate just
+            # warn and copy — no behavior change)
+            self._decode_paged = jax.jit(
+                lambda p, t, pg, tb, ln: model.decode_paged(
+                    p, t, pg, tb, ln, attn_impl),
+                donate_argnums=(2,))
+            self._page_copy = jax.jit(_copy_pages, donate_argnums=(0,))
+        else:
+            self.max_len = max_len
+            self.cache = model.init_cache(rows, max_len)
+            # per-row write positions: every row decodes at its own index
+            # (continuous batching); supported by decoder/zamba/rwkv
+            # kinds.  encdec keeps the scalar index (synchronous waves).
+            self.per_row = model.cfg.arch_kind in ("decoder", "zamba",
+                                                   "rwkv")
+            if self.per_row:
+                self.cache["index"] = jnp.zeros((rows,), jnp.int32)
+            self._decode = jax.jit(model.decode_step)
 
     # ------------------------------------------------------------------
     @classmethod
     def from_artifact(cls, path_or_name: str, *,
                       registry_root: Optional[str] = None,
                       slots: int = 4, max_len: int = 512, eos_id: int = 1,
-                      seed: int = 0) -> "Engine":
+                      seed: int = 0, **kwargs) -> "Engine":
         """Cold-start an engine from a compressed model artifact.
 
         path_or_name: a .hnart file path, or (with registry_root) a
@@ -105,6 +198,7 @@ class Engine:
         training state is involved (repro.artifact).  Quantized banks are
         dequantized at load: the model layers need real arrays (a
         keep-quantized engine path waits on an int8 decompress kernel).
+        Extra kwargs (page_size, scheduler, ...) pass through to Engine.
         """
         from repro.artifact import io as artifact_io
         if registry_root is not None:
@@ -113,17 +207,35 @@ class Engine:
             path_or_name = entry["path"]
         _, model, params = artifact_io.load_model(path_or_name)
         return cls(model, params, slots=slots, max_len=max_len,
-                   eos_id=eos_id, seed=seed)
+                   eos_id=eos_id, seed=seed, **kwargs)
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        req.tokens = []
-        self._queue.append(req)
+    def _extra_tokens(self, req: Request) -> int:
+        if req.extras and "image_embeds" in req.extras:
+            return self.model.cfg.num_image_tokens
+        return 0
 
-    def _free_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if s.req is None]
+    def submit(self, req: Request) -> bool:
+        """Enqueue a request.  False = refused (backpressure: bounded
+        queue full, or the request could never fit the page pool)."""
+        if req.tokens is None:
+            req.tokens = []
+        if self.paged:
+            total = len(req.prompt) + self._extra_tokens(req) \
+                + req.max_new_tokens
+            if not self.kv.fits_ever(total):
+                req.status = "rejected"
+                self._failed.append(req)
+                return False
+        if not self.sched.submit(req, time.time()):
+            req.status = "rejected"
+            self._failed.append(req)
+            return False
+        req.status = "queued"
+        return True
 
-    BUCKET = 64
+    def _free_rows(self) -> List[int]:
+        return [i for i, r in enumerate(self.rows) if r is None]
 
     def _can_bucket(self, req: Request) -> bool:
         """Pad-and-mask bucketing is sound only for pure KV-cache decoders:
@@ -134,58 +246,96 @@ class Engine:
         exact-length."""
         return self.model.cfg.arch_kind == "decoder" and not req.extras
 
-    def _admit(self) -> None:
-        """Prefill queued requests into free slots (continuous batching).
+    def _feed(self, req: Request) -> np.ndarray:
+        """Prefill token feed: the prompt plus anything generated before
+        a preemption (re-prefilling them recomputes the evicted K/V)."""
+        if req.tokens:
+            return np.concatenate(
+                [np.asarray(req.prompt, np.int32),
+                 np.asarray(req.tokens, np.int32)])
+        return np.asarray(req.prompt, np.int32)
+
+    def _can_admit(self, req: Request) -> bool:
+        if not self.paged:
+            return True
+        feed = len(req.prompt) + len(req.tokens or ()) \
+            + self._extra_tokens(req)
+        return self.kv.can_admit(feed)
+
+    def _admit(self, now: float) -> None:
+        """Prefill queued requests into free rows (continuous batching).
 
         Prompt lengths are bucketed to multiples of BUCKET with real
         pad-and-mask (batch["length"] carries the true length into the
         model), so prefill compiles once per bucket, not once per distinct
         prompt length."""
-        for i in self._free_slots():
-            if not self._queue:
-                break
-            req = self._queue.pop(0)
-            p = len(req.prompt)
-            if self._can_bucket(req):
-                # clamp to the cache: a bucket can't exceed max_len (a
-                # prompt longer than max_len is a caller error either way)
-                bucket = min(-(-p // self.BUCKET) * self.BUCKET,
-                             self.max_len)
-                bucket = max(bucket, p)
-                prompt = np.pad(req.prompt, (0, bucket - p))
-                batch = {"tokens": jnp.asarray(prompt[None, :]),
-                         "cache": self.model.init_cache(1, self.max_len),
-                         "length": jnp.asarray(p, jnp.int32)}
-            else:
-                batch = {"tokens": jnp.asarray(req.prompt[None, :]),
-                         "cache": self.model.init_cache(1, self.max_len)}
-            if req.extras:
-                batch.update({k: jnp.asarray(v) for k, v in
-                              req.extras.items()})
-            logits, c1 = self._prefill(self.params, batch)
-            self.cache = _slot_update(self.cache, c1, i)
-            pos = int(np.asarray(c1["index"]))
+        for _ in range(self.sched.cfg.max_prefills_per_tick):
+            free = self._free_rows()
+            if not free:
+                return
+            req = self.sched.pop_admissible(self._can_admit)
+            if req is None:
+                return
+            self._prefill_into(free[0], req, now)
+
+    def _prefill_into(self, row: int, req: Request, now: float) -> None:
+        feed = self._feed(req)
+        p = len(feed)
+        if self._can_bucket(req):
+            # clamp to the cache: a bucket can't exceed max_len (a
+            # prompt longer than max_len is a caller error either way)
+            bucket = min(-(-p // self.BUCKET) * self.BUCKET, self.max_len)
+            bucket = max(bucket, p)
+            prompt = np.pad(feed, (0, bucket - p))
+            cache = self._prefill_cache if self.paged \
+                else self.model.init_cache(1, self.max_len)
+            batch = {"tokens": jnp.asarray(prompt[None, :]),
+                     "cache": cache,
+                     "length": jnp.asarray(p, jnp.int32)}
+        else:
+            cache = self._prefill_cache if self.paged \
+                else self.model.init_cache(1, self.max_len)
+            batch = {"tokens": jnp.asarray(feed[None, :]),
+                     "cache": cache}
+        if req.extras:
+            batch.update({k: jnp.asarray(v) for k, v in
+                          req.extras.items()})
+        logits, c1 = self._prefill(self.params, batch)
+        pos = int(np.asarray(c1["index"]))
+        if self.paged:
+            ok = self.kv.admit_row(row, pos)
+            assert ok, "pop_admissible admitted without pages"
+            self.pages = self._page_copy(
+                self.pages, c1["k"], c1["v"],
+                jnp.asarray(self.kv.table[row]))
+        else:
+            self.cache = _slot_update(self.cache, c1, row)
             if self.per_row:
-                self.cache["index"] = \
-                    self.cache["index"].at[i].set(pos)
+                self.cache["index"] = self.cache["index"].at[row].set(pos)
             else:
                 self.cache["index"] = c1["index"]
-            self.slots[i] = _Slot(req, pos)
-            tok = self._sample(logits[:, -1], temps=[req.temperature])
-            req.tokens.append(int(tok[0]))
-            self._tokens[i, 0] = int(tok[0])
+        self.rows[row] = req
+        self._seq += 1
+        self._row_seq[row] = self._seq
+        req.status = "running"
+        if req.first_admit_time is None:
+            req.first_admit_time = now
+        tok = self._sample(logits[:, -1], temps=[req.temperature])
+        req.tokens.append(int(tok[0]))
+        if req.first_token_time is None:
+            req.first_token_time = time.time()
+        self._tokens[row, 0] = int(tok[0])
 
     def _sample(self, logits, temps: Optional[List[float]] = None
                 ) -> np.ndarray:
         """Sample next tokens.  temps: per-row temperatures; defaults to
-        the active slots' temperatures (decode path).  Prefill passes the
-        admitted request's temperature explicitly — slot state isn't
-        updated yet at that point, so deriving it from self.slots would
-        read a stale/unrelated slot."""
+        the active rows' temperatures (decode path).  Prefill passes the
+        admitted request's temperature explicitly — row state isn't
+        updated yet at that point, so deriving it from self.rows would
+        read a stale/unrelated row."""
         logits = jnp.asarray(logits, jnp.float32)
         if temps is None:
-            temps = [s.req.temperature if s.req else 0.0
-                     for s in self.slots]
+            temps = [r.temperature if r else 0.0 for r in self.rows]
         assert len(temps) >= logits.shape[0], (len(temps), logits.shape)
         self._key, k = jax.random.split(self._key)
         greedy = jnp.argmax(logits, -1)
@@ -196,51 +346,148 @@ class Engine:
         return np.asarray(jnp.where(use_greedy, greedy, sampled),
                           np.int32)
 
-    def _retire(self) -> None:
-        for i, s in enumerate(self.slots):
-            if s.req is None:
-                continue
-            r = s.req
-            if (r.tokens and r.tokens[-1] == self.eos_id) \
-                    or len(r.tokens) >= r.max_new_tokens:
-                r.done = True
-                self._done.append(r)
-                self.slots[i] = _Slot()
+    # ------------------------------------------------------------------
+    def _preempt(self, row: int) -> None:
+        req = self.rows[row]
+        self.rows[row] = None
+        self.kv.release_row(row)
+        req.status = "preempted"
+        req.preemptions += 1
+        self.sched.requeue(req)
 
+    def _finish(self, row: int, truncated: bool = False) -> None:
+        req = self.rows[row]
+        self.rows[row] = None
+        if self.paged:
+            self.kv.release_row(row)
+        req.done = True
+        req.truncated = truncated
+        req.status = "done"
+        req.finish_time = time.time()
+        self._done.append(req)
+
+    def _ensure_room(self, active: List[int]) -> List[int]:
+        """Paged backend: make every active row's next write position
+        addressable, preempting youngest-first on pool exhaustion."""
+        for i in list(active):
+            if self.rows[i] is None:        # preempted by an earlier row
+                continue
+            while True:
+                st = self.kv.ensure_decode_room(i)
+                if st == "ok":
+                    break
+                if st == "full":            # max_len hit: force-retire
+                    self._finish(i, truncated=True)
+                    break
+                victims = [j for j in range(self.n_rows)
+                           if self.rows[j] is not None]
+                victim = max(victims, key=lambda j: self._row_seq[j])
+                self._preempt(victim)
+                if victim == i:
+                    break
+        return [i for i in active if self.rows[i] is not None]
+
+    # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine tick: admit, decode all active slots, retire."""
-        self._admit()
-        active = [i for i, s in enumerate(self.slots) if s.req is not None]
+        """One engine tick: expire, admit, decode all active rows,
+        retire.  Returns the number of rows decoded."""
+        now = time.time()
+        for r in self.sched.expire(now):
+            r.status = "expired"
+            self._failed.append(r)
+        self._admit(now)
+        # retire BEFORE decoding: a prefill that already satisfied the
+        # request (max_new_tokens == 1, or EOS as the first token) must
+        # not decode a surplus token
+        self._retire()
+        active = [i for i, r in enumerate(self.rows) if r is not None]
         if not active:
             return 0
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(self._tokens), self.cache)
-        toks = self._sample(logits[:, -1])
-        for i in active:
-            self.slots[i].req.tokens.append(int(toks[i]))
-            self._tokens[i, 0] = int(toks[i])
-            self.slots[i].pos += 1
+        if self.paged:
+            active = self._ensure_room(active)
+            if not active:
+                return 0
+            logits, self.pages = self._decode_paged(
+                self.params, jnp.asarray(self._tokens), self.pages,
+                jnp.asarray(self.kv.table), jnp.asarray(self.kv.lengths))
+            toks = self._sample(logits[:, -1])
+            for i in active:
+                self.kv.advance(i)
+                self.rows[i].tokens.append(int(toks[i]))
+                self._tokens[i, 0] = int(toks[i])
+        else:
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(self._tokens), self.cache)
+            toks = self._sample(logits[:, -1])
+            for i in active:
+                self.rows[i].tokens.append(int(toks[i]))
+                self._tokens[i, 0] = int(toks[i])
         self._retire()
         return len(active)
 
+    def _retire(self) -> None:
+        for i, r in enumerate(self.rows):
+            if r is None:
+                continue
+            if (r.tokens and r.tokens[-1] == self.eos_id) \
+                    or len(r.tokens) >= r.max_new_tokens:
+                self._finish(i)
+
     def run(self, max_ticks: int = 10000) -> List[Request]:
         ticks = 0
-        while (self._queue or any(s.req for s in self.slots)) \
+        while (len(self.sched) or any(r is not None for r in self.rows)) \
                 and ticks < max_ticks:
             self.step()
             ticks += 1
         return self._done
 
+    # ------------------------------------------------------------------
+    @property
+    def failed(self) -> List[Request]:
+        """Requests refused (backpressure) or expired (deadline)."""
+        return list(self._failed)
+
+    def stats(self) -> Dict[str, Any]:
+        lat = [r.finish_time - r.submit_time for r in self._done
+               if r.finish_time and r.submit_time]
+        ttft = [r.first_token_time - r.submit_time for r in self._done
+                if r.first_token_time and r.submit_time]
+        live = [r for r in self.rows if r is not None]
+        out = {
+            "done": len(self._done),
+            "failed": len(self._failed),
+            "preemptions": sum(r.preemptions for r in
+                               self._done + self._failed + live),
+            "tokens": sum(len(r.tokens) for r in self._done),
+        }
+        if lat:
+            out["latency_p50_s"] = float(np.percentile(lat, 50))
+            out["latency_p99_s"] = float(np.percentile(lat, 99))
+        if ttft:
+            out["ttft_p50_s"] = float(np.percentile(ttft, 50))
+        if self.paged:
+            out["pages_in_use"] = self.kv.alloc.num_used
+            out["pages_free"] = self.kv.alloc.num_free
+        return out
+
 
 def generate_batch(model: Model, params, prompts: List[np.ndarray],
                    max_new_tokens: int = 32, max_len: int = 512,
                    slots: int = 4, eos_id: int = 1,
-                   extras: Optional[List[Dict]] = None) -> List[List[int]]:
-    """Convenience wrapper: submit all prompts, run to completion."""
-    eng = Engine(model, params, slots=slots, max_len=max_len, eos_id=eos_id)
+                   extras: Optional[List[Dict]] = None,
+                   **kwargs) -> List[List[int]]:
+    """Convenience wrapper: submit all prompts, run to completion.
+
+    All prompts are enqueued up front, so the queue bound is sized to
+    the batch (backpressure is for live serving, not batch jobs)."""
+    kwargs.setdefault("scheduler",
+                      SchedulerConfig(max_queue=max(len(prompts), 1)))
+    eng = Engine(model, params, slots=slots, max_len=max_len, eos_id=eos_id,
+                 **kwargs)
     for i, p in enumerate(prompts):
-        eng.submit(Request(uid=i, prompt=np.asarray(p, np.int32),
-                           max_new_tokens=max_new_tokens,
-                           extras=extras[i] if extras else None))
+        ok = eng.submit(Request(uid=i, prompt=np.asarray(p, np.int32),
+                                max_new_tokens=max_new_tokens,
+                                extras=extras[i] if extras else None))
+        assert ok, f"request {i} rejected (queue/pool sizing)"
     done = eng.run()
     return [r.tokens for r in sorted(done, key=lambda r: r.uid)]

@@ -1,0 +1,162 @@
+"""Paged KV cache: fixed-size pages, free-list allocator, per-row page
+tables.
+
+The device side is a physical page pool per layer-stacked k/v
+(``model.init_paged_cache``); this module is the *host-side* bookkeeping
+the engine drives every tick:
+
+- ``PageAllocator`` — a free-list over physical page ids.  Page 0 is
+  reserved as the **trash page**: idle decode rows point their whole
+  table at it so their (masked, discarded) writes land somewhere
+  harmless, and no live row ever owns it.
+- ``PagedKVCache`` — per-row page lists, the dense ``(rows, MAXP)``
+  int32 table the decode step consumes, and per-row lengths.
+
+Invariants (property-tested in tests/test_serving.py):
+- a physical page is owned by at most one row at a time,
+- alloc is all-or-nothing (no partial grants),
+- release returns exactly the pages a row acquired (no leak, no
+  double-free).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+class PageAllocator:
+    """Free-list allocator over physical pages [1, num_pages)."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (one is the trash page)")
+        self.num_pages = num_pages
+        self._free = deque(range(1, num_pages))
+        self._used: set = set()
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Grant n pages, or None (all-or-nothing) if fewer are free."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        pages = [self._free.popleft() for _ in range(n)]
+        for p in pages:
+            assert p not in self._used, f"double-assigned page {p}"
+            self._used.add(p)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"freeing page {p} that is not allocated")
+            self._used.remove(p)
+            self._free.append(p)
+
+
+class PagedKVCache:
+    """Row-indexed page-table bookkeeping over a PageAllocator.
+
+    ``rows`` is the static decode-batch width; ``max_pages_per_seq`` the
+    static table width (ceil(max_len / page_size)).  Device page pools
+    are owned by the engine; this class only tracks who owns what.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, rows: int,
+                 max_pages_per_seq: int):
+        self.page_size = page_size
+        self.rows = rows
+        self.maxp = max_pages_per_seq
+        self.alloc = PageAllocator(num_pages)
+        self.table = np.zeros((rows, max_pages_per_seq), np.int32)
+        self.lengths = np.zeros((rows,), np.int32)
+        self.row_pages: Dict[int, List[int]] = {}
+
+    # ------------------------------------------------------------------
+    @property
+    def usable_pages(self) -> int:
+        return self.alloc.num_pages - 1          # minus the trash page
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-tokens // self.page_size)
+
+    def fits_ever(self, tokens: int) -> bool:
+        """Could a request whose feed ever reaches ``tokens`` cached
+        positions hold its working set in an otherwise empty pool?
+        (Submit-time guard: prevents un-admittable requests from wedging
+        the FIFO head forever — with this bound, an admission that keeps
+        failing eventually succeeds once the pool drains.)"""
+        return self.pages_for(tokens) <= min(self.usable_pages, self.maxp)
+
+    def can_admit(self, tokens: int) -> bool:
+        """Pages available right now to cache ``tokens`` prefilled
+        positions AND address the first decode write at position
+        ``tokens`` (pages_for(tokens + 1) covers both: one extra page
+        exactly when the feed ends on a page boundary)."""
+        return self.pages_for(tokens + 1) <= self.alloc.num_free
+
+    # ------------------------------------------------------------------
+    def admit_row(self, row: int, tokens: int) -> bool:
+        """Bind ``row`` to freshly-allocated pages covering ``tokens``
+        cached positions.  False (nothing changed) if pages are short."""
+        assert row not in self.row_pages, f"row {row} already bound"
+        pages = self.alloc.alloc(self.pages_for(tokens))
+        if pages is None:
+            return False
+        self.row_pages[row] = pages
+        self.table[row, :] = TRASH_PAGE
+        self.table[row, :len(pages)] = pages
+        self.lengths[row] = tokens
+        return True
+
+    def ensure_decode_room(self, row: int) -> str:
+        """Make position ``lengths[row]`` addressable (the next token's
+        k/v write).  Allocates at most one page.  Returns:
+
+        - "ok"   — position addressable,
+        - "oom"  — pool exhausted (caller preempts a row and retries),
+        - "full" — table width (max_len) hit (caller force-retires).
+        """
+        need = self.lengths[row] // self.page_size + 1
+        pages = self.row_pages[row]
+        if len(pages) >= need:
+            return "ok"
+        if need > self.maxp:
+            return "full"
+        got = self.alloc.alloc(1)
+        if got is None:
+            return "oom"
+        pages.extend(got)
+        self.table[row, len(pages) - 1] = got[0]
+        return "ok"
+
+    def advance(self, row: int) -> None:
+        self.lengths[row] += 1
+
+    def release_row(self, row: int) -> None:
+        pages = self.row_pages.pop(row)
+        self.alloc.free(pages)
+        self.table[row, :] = TRASH_PAGE
+        self.lengths[row] = 0
+
+    def leak_check(self) -> None:
+        """Every page is either free or owned by exactly one live row."""
+        owned = [p for pages in self.row_pages.values() for p in pages]
+        assert len(owned) == len(set(owned)), "page owned by two rows"
+        assert TRASH_PAGE not in owned, "trash page was allocated"
+        assert len(owned) == self.alloc.num_used, \
+            (len(owned), self.alloc.num_used)
+        assert self.alloc.num_free + self.alloc.num_used \
+            == self.usable_pages

@@ -1,0 +1,101 @@
+"""Admission scheduler for the continuous-batching engine.
+
+Policy surface (the ``--scheduler`` knob):
+
+- ``fifo``     — one class, strict arrival order.
+- ``priority`` — FIFO *within* each priority class; classes served in
+  ascending ``Request.priority`` (0 = most urgent).  Head-of-line rule:
+  only the head of each class is eligible, so service order within a
+  class always equals arrival order (the property tests pin this).
+
+Backpressure: the queue is bounded (``max_queue``); ``submit`` refuses
+beyond it — callers see the rejection immediately instead of a silently
+growing tail.  An optional queue deadline expires requests that waited
+longer than ``deadline_s`` before admission (they fail fast rather than
+serve a dead client).
+
+Preempted requests re-enter at the *head* of their class: they were
+admitted before anything still queued there, so head placement restores
+arrival order.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+POLICIES = ("fifo", "priority")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    policy: str = "fifo"
+    max_queue: int = 256            # bounded queue: submit rejects beyond
+    max_prefills_per_tick: int = 1  # prefill/decode interleaving ratio
+    deadline_s: Optional[float] = None  # max queue wait before expiry
+
+    def __post_init__(self):
+        if self.policy not in POLICIES:
+            raise ValueError(f"policy {self.policy!r} not in {POLICIES}")
+        if self.max_queue < 1 or self.max_prefills_per_tick < 1:
+            raise ValueError((self.max_queue, self.max_prefills_per_tick))
+
+
+class Scheduler:
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
+        self.cfg = cfg
+        self._classes: Dict[int, deque] = {}
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self._classes.values())
+
+    def _class(self, req) -> int:
+        return req.priority if self.cfg.policy == "priority" else 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req, now: float) -> bool:
+        """Enqueue; False = rejected by backpressure (queue full)."""
+        if len(self) >= self.cfg.max_queue:
+            return False
+        req.submit_time = now
+        self._classes.setdefault(self._class(req), deque()).append(req)
+        return True
+
+    def requeue(self, req) -> None:
+        """Return a preempted request to the head of its class."""
+        self._classes.setdefault(self._class(req), deque()).appendleft(req)
+
+    def expire(self, now: float) -> List:
+        """Remove and return queued requests past the queue deadline.
+
+        The deadline bounds the wait *before first admission* only: a
+        preempted request re-enters with its original submit_time, but
+        it already served tokens — expiring it would silently discard
+        them, so anything ever admitted is exempt."""
+        if self.cfg.deadline_s is None:
+            return []
+        dead = []
+        for q in self._classes.values():
+            kept = deque()
+            for r in q:
+                if getattr(r, "first_admit_time", None) is None \
+                        and now - r.submit_time > self.cfg.deadline_s:
+                    dead.append(r)
+                else:
+                    kept.append(r)
+            q.clear()
+            q.extend(kept)
+        return dead
+
+    def pop_admissible(self, can_admit: Callable) -> Optional[object]:
+        """Next request to prefill: the head of the most urgent
+        non-empty class whose head fits.  Heads only — skipping past a
+        blocked head would break FIFO-within-class."""
+        for prio in sorted(self._classes):
+            q = self._classes[prio]
+            if q and can_admit(q[0]):
+                return q.popleft()
+        return None
+
+    def depth_by_class(self) -> Dict[int, int]:
+        return {p: len(q) for p, q in self._classes.items() if q}

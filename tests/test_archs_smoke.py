@@ -30,6 +30,7 @@ def _batch(cfg, key=None, seq=S):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("name", C.ASSIGNED)
 def test_train_step_smoke(name):
     cfg = reduced(C.get(name))
@@ -70,6 +71,7 @@ def test_prefill_decode_smoke(name):
 @pytest.mark.parametrize("name", ["llama3-405b", "granite-moe-1b-a400m",
                                   "zamba2-2.7b", "rwkv6-7b",
                                   "whisper-medium"])
+@pytest.mark.slow
 def test_hashed_variant_smoke(name):
     """The paper technique as a first-class config flag on every family."""
     cfg = reduced(C.get(name)).with_(

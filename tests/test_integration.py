@@ -28,6 +28,7 @@ TINY = ArchConfig(
     d_ff=128, vocab_size=256, remat=False, dtype="float32")
 
 
+@pytest.mark.slow
 def test_train_loss_decreases(tmp_path):
     mesh = mesh_lib.single_device_mesh()
     out = run(TINY, mesh, steps=120, batch=16, seq=32, lr=3e-3,
@@ -37,6 +38,7 @@ def test_train_loss_decreases(tmp_path):
     assert last < first - 0.1, (first, last)
 
 
+@pytest.mark.slow
 def test_hashed_train_loss_decreases():
     mesh = mesh_lib.single_device_mesh()
     cfg = TINY.hashed_variant(0.25).with_(hash_panel_cols=0)
@@ -89,6 +91,7 @@ def test_checkpoint_elastic_remesh(tmp_path):
     assert isinstance(restored["w"].sharding, NamedSharding)
 
 
+@pytest.mark.slow
 def test_preemption_guard_emergency_checkpoint(tmp_path):
     """SIGTERM mid-run -> clean exit with a committed checkpoint."""
     ck = str(tmp_path / "ck")
@@ -197,6 +200,7 @@ def test_prefetcher_orders_and_propagates_errors():
         next(pf2)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen3-1.7b", "zamba2-2.7b", "rwkv6-7b"])
 def test_serving_engine_matches_sequential(arch):
     cfg = reduced(C.get(arch)).with_(dtype="float32")
@@ -221,6 +225,7 @@ def test_serving_engine_matches_sequential(arch):
         assert single(np.asarray(p, np.int32)) == got
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("kind", ["hashed_space", "int8"])
 def test_train_with_grad_compression_converges(kind):
     """Compressed-gradient training (error feedback) still reduces loss —

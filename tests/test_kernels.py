@@ -1,5 +1,7 @@
 """Pallas kernel sweep: every kernel vs the pure-jnp ref.py oracle,
-across shapes, modes, dtypes, and compression factors (interpret mode)."""
+across shapes, modes, dtypes, and compression factors (interpret mode).
+Covers the hashed decompress-GEMM kernels and the paged-gather decode
+attention kernel behind the continuous-batching engine."""
 import itertools
 
 import jax
@@ -10,6 +12,7 @@ import pytest
 from repro.core import HashedSpec, init
 from repro.kernels import ops, ref
 from repro.kernels import hashed_matmul as hk
+from repro.kernels.paged_attention import paged_decode_attention
 
 ELEMENT_CASES = [
     # (rows, cols, compression, panel_cols, block)
@@ -161,6 +164,117 @@ def test_dw_kernels_direct():
     want = ref.hashed_dw_ref(x, g, spec_b)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged-gather decode attention (serving hot path)
+# ---------------------------------------------------------------------------
+
+def _tol(dtype):
+    """Shared parity tolerances: tight fp32, loose bf16 (same ladder as
+    the GEMM dtype sweep above)."""
+    return (2e-5, 2e-4) if dtype == jnp.float32 else (3e-2, 3e-1)
+
+
+def _mk_paged(seed, *, b, ps, maxp, n_kv, g, d, dtype=jnp.float32,
+              lengths=None):
+    """Random page pools + per-row page tables with DISTINCT live pages
+    (the allocator invariant) + ragged lengths."""
+    rng = np.random.default_rng(seed)
+    num_pages = 1 + b * maxp                       # page 0 = trash
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    pk = jax.random.normal(ks[0], (num_pages, ps, n_kv, d)).astype(dtype)
+    pv = jax.random.normal(ks[1], (num_pages, ps, n_kv, d)).astype(dtype)
+    q = jax.random.normal(ks[2], (b, n_kv * g, d)).astype(dtype)
+    if lengths is None:
+        lengths = rng.integers(1, maxp * ps + 1, size=b)
+    lengths = np.asarray(lengths, np.int32)
+    table = np.zeros((b, maxp), np.int32)
+    pool = list(range(1, num_pages))
+    rng.shuffle(pool)
+    for i in range(b):
+        n = -(-int(lengths[i]) // ps)
+        for j in range(n):
+            table[i, j] = pool.pop()
+    return q, pk, pv, jnp.asarray(table), jnp.asarray(lengths)
+
+
+@pytest.mark.parametrize("ps,maxp,g,dtype", [
+    (4, 3, 1, jnp.float32),
+    (8, 4, 2, jnp.float32),
+    (16, 2, 4, jnp.float32),
+    (8, 3, 2, jnp.bfloat16),
+    (16, 4, 1, jnp.bfloat16),
+])
+def test_paged_attention_kernel_vs_ref(ps, maxp, g, dtype):
+    """Kernel (online softmax page walk) vs gather-then-attend oracle,
+    across page sizes, ragged lengths, GQA groups, and dtypes."""
+    q, pk, pv, table, lengths = _mk_paged(
+        ps * maxp + g, b=3, ps=ps, maxp=maxp, n_kv=2, g=g, d=16,
+        dtype=dtype)
+    got = paged_decode_attention(q, pk, pv, table, lengths,
+                                 interpret=True)
+    want = ref.paged_attention_ref(q, pk, pv, table, lengths)
+    assert got.dtype == q.dtype
+    rtol, atol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("window", [1, 3, 8])
+def test_paged_attention_sliding_window(window):
+    """Windowed masking parity (the gemma local-attention layers)."""
+    q, pk, pv, table, lengths = _mk_paged(
+        11 + window, b=2, ps=4, maxp=4, n_kv=2, g=2, d=8)
+    got = paged_decode_attention(q, pk, pv, table, lengths,
+                                 jnp.int32(window), interpret=True)
+    want = ref.paged_attention_ref(q, pk, pv, table, lengths, window)
+    rtol, atol = _tol(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=rtol, atol=atol)
+
+
+def test_paged_attention_matches_dense_attend():
+    """Stronger oracle: scatter a dense KV cache into pages and compare
+    both paged paths against the engine's dense attention (attend with
+    per-row kv_valid), which the serving parity tests trust."""
+    from repro.nn import attention as ATT
+    b, ps, maxp, n_kv, g, d = 2, 8, 3, 2, 2, 16
+    q, pk, pv, table, lengths = _mk_paged(
+        5, b=b, ps=ps, maxp=maxp, n_kv=n_kv, g=g, d=d)
+    t = maxp * ps
+    # gather the paged layout back to (B, T, n_kv, d) dense
+    kd = jnp.take(pk, table, axis=0).reshape(b, t, n_kv, d)
+    vd = jnp.take(pv, table, axis=0).reshape(b, t, n_kv, d)
+    plan = ATT.AttentionPlan(d_model=n_kv * g * d, num_heads=n_kv * g,
+                             num_kv_heads=n_kv, head_dim=d,
+                             dtype=jnp.float32)
+    q_pos = (lengths - 1)[:, None]                 # (B, 1)
+    kv_valid = jnp.arange(t)[None, :] < lengths[:, None]
+    want = ATT.attend(plan, q[:, None], kd, vd, q_pos, jnp.arange(t),
+                      kv_valid)[:, 0]              # (B, Hq*D)
+    for impl, out in [
+        ("ref", ref.paged_attention_ref(q, pk, pv, table, lengths)),
+        ("pallas", paged_decode_attention(q, pk, pv, table, lengths,
+                                          interpret=True)),
+    ]:
+        np.testing.assert_allclose(
+            np.asarray(out).reshape(b, -1), np.asarray(want),
+            rtol=2e-5, atol=2e-4, err_msg=impl)
+
+
+def test_paged_attention_idle_rows_finite():
+    """length == 0 rows (idle decode slots, whole table on the trash
+    page) must produce finite output — no 0/0 softmax."""
+    q, pk, pv, table, lengths = _mk_paged(
+        9, b=3, ps=4, maxp=2, n_kv=2, g=1, d=8, lengths=[5, 0, 3])
+    table = table.at[1, :].set(0)
+    for out in (ref.paged_attention_ref(q, pk, pv, table, lengths),
+                paged_decode_attention(q, pk, pv, table, lengths,
+                                       interpret=True)):
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_array_equal(np.asarray(out)[1], 0.0)
 
 
 def test_kernel_matches_core_paths():

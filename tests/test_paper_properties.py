@@ -26,6 +26,7 @@ def specs(draw, max_dim=96):
     return HashedSpec((rows, cols), comp, mode="element", seed=seed)
 
 
+@pytest.mark.slow
 @given(spec=specs(), batch=st.integers(1, 5))
 @settings(**SETTINGS)
 def test_eq4_equals_eq5(spec, batch):
@@ -39,6 +40,7 @@ def test_eq4_equals_eq5(spec, batch):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.slow
 @given(spec=specs())
 @settings(**SETTINGS)
 def test_eq12_gradient(spec):

@@ -1,0 +1,346 @@
+"""Property tests for the continuous-batching serving stack.
+
+Host-side invariants (no model, pure bookkeeping — hypothesis drives
+random admit/retire/preempt sequences):
+- the page allocator never double-assigns and never leaks,
+- PagedKVCache row bookkeeping conserves pages across admit / grow /
+  release,
+- the scheduler preserves FIFO order within a priority class, bounds
+  its queue (backpressure), and expires past-deadline requests.
+
+Engine-level invariants (tiny decoder, real jitted prefill/decode):
+- requests admit AND retire mid-flight (a short request completes while
+  a long one is still decoding — the acceptance criterion),
+- every admitted request retires with exactly max_new_tokens or an EOS,
+- preemption under an oversubscribed page pool reproduces the
+  fully-provisioned greedy output token-for-token,
+- greedy decode through an ``.hnart`` cold start (Engine.from_artifact)
+  is token-identical to the in-memory engine (determinism regression).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+from repro.serving.paged_cache import PageAllocator, PagedKVCache
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+
+class _Req:
+    """Stand-in request for scheduler-only tests."""
+
+    def __init__(self, uid, priority=0):
+        self.uid = uid
+        self.priority = priority
+        self.submit_time = None
+
+
+# ---------------------------------------------------------------------------
+# page allocator
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(num_pages=st.integers(2, 24), seed=st.integers(0, 10 ** 6))
+def test_allocator_never_double_assigns_or_leaks(num_pages, seed):
+    rng = np.random.default_rng(seed)
+    alloc = PageAllocator(num_pages)
+    held = []
+    for _ in range(40):
+        if held and rng.random() < 0.4:
+            i = int(rng.integers(len(held)))
+            alloc.free(held.pop(i))
+        else:
+            n = int(rng.integers(0, num_pages))
+            free_before = alloc.num_free
+            got = alloc.alloc(n)
+            if n > free_before:
+                assert got is None, "granted more pages than were free"
+                continue
+            assert got is not None and len(got) == n
+            held.append(got)
+        flat = [p for g in held for p in g]
+        assert len(flat) == len(set(flat)), "double-assigned page"
+        assert 0 not in flat, "trash page handed out"
+        assert alloc.num_free + alloc.num_used == num_pages - 1
+        assert alloc.num_used == len(flat)
+    for g in held:
+        alloc.free(g)
+    assert alloc.num_free == num_pages - 1
+
+
+def test_allocator_rejects_bad_free():
+    alloc = PageAllocator(4)
+    got = alloc.alloc(1)
+    alloc.free(got)
+    with pytest.raises(ValueError):
+        alloc.free(got)          # double free
+    with pytest.raises(ValueError):
+        alloc.free([0])          # trash page was never allocated
+
+
+@settings(**SETTINGS)
+@given(num_pages=st.integers(4, 32), page_size=st.sampled_from([4, 8, 16]),
+       rows=st.integers(1, 4), seed=st.integers(0, 10 ** 6))
+def test_paged_cache_random_admit_grow_release(num_pages, page_size, rows,
+                                               seed):
+    """No page leak across random admit / decode-grow / release."""
+    maxp = 4
+    kv = PagedKVCache(num_pages, page_size, rows, maxp)
+    rng = np.random.default_rng(seed)
+    for _ in range(60):
+        op = rng.random()
+        bound = [r for r in range(rows) if r in kv.row_pages]
+        free_rows = [r for r in range(rows) if r not in kv.row_pages]
+        if op < 0.4 and free_rows:
+            tokens = int(rng.integers(1, maxp * page_size))
+            if kv.pages_for(tokens) <= kv.alloc.num_free:
+                assert kv.admit_row(free_rows[0], tokens)
+                r = free_rows[0]
+                n = kv.pages_for(tokens)
+                assert list(kv.table[r, :n]) == kv.row_pages[r]
+                assert (kv.table[r, n:] == 0).all()
+            else:
+                assert not kv.admit_row(free_rows[0], tokens)
+        elif op < 0.7 and bound:
+            r = bound[int(rng.integers(len(bound)))]
+            st_ = kv.ensure_decode_room(r)
+            if st_ == "ok":
+                kv.advance(r)
+        elif bound:
+            kv.release_row(bound[int(rng.integers(len(bound)))])
+        kv.leak_check()
+    for r in list(kv.row_pages):
+        kv.release_row(r)
+    kv.leak_check()
+    assert kv.alloc.num_free == kv.usable_pages
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 30), classes=st.integers(1, 3),
+       seed=st.integers(0, 10 ** 6))
+def test_scheduler_fifo_within_priority_class(n, classes, seed):
+    """Service order within a class equals submission order, under a
+    random admissibility gate (pages free / busy rows)."""
+    rng = np.random.default_rng(seed)
+    sched = Scheduler(SchedulerConfig(policy="priority", max_queue=n))
+    reqs = [_Req(uid, priority=int(rng.integers(classes)))
+            for uid in range(n)]
+    for r in reqs:
+        assert sched.submit(r, now=float(r.uid))
+    served = []
+    stall = 0
+    while len(sched) and stall < 200:
+        admissible = rng.random() < 0.7
+        got = sched.pop_admissible(lambda r: admissible)
+        if got is None:
+            stall += 1
+            continue
+        served.append(got)
+    assert len(served) == n
+    for c in range(classes):
+        uids = [r.uid for r in served if r.priority == c]
+        assert uids == sorted(uids), f"class {c} out of FIFO order"
+
+
+def test_scheduler_backpressure_bounded_queue():
+    sched = Scheduler(SchedulerConfig(max_queue=2))
+    assert sched.submit(_Req(0), now=0.0)
+    assert sched.submit(_Req(1), now=0.0)
+    assert not sched.submit(_Req(2), now=0.0)      # full: refused
+    sched.pop_admissible(lambda r: True)
+    assert sched.submit(_Req(3), now=1.0)          # drained: accepted
+
+
+def test_scheduler_deadline_expiry():
+    sched = Scheduler(SchedulerConfig(deadline_s=1.0))
+    a, b = _Req(0), _Req(1)
+    sched.submit(a, now=0.0)
+    sched.submit(b, now=5.0)
+    dead = sched.expire(now=5.5)
+    assert [r.uid for r in dead] == [0] and len(sched) == 1
+
+
+def test_scheduler_deadline_spares_preempted_requests():
+    """The deadline bounds queue wait BEFORE first admission; a
+    preempted (already-admitted, tokens served) request must not be
+    expired on requeue."""
+    sched = Scheduler(SchedulerConfig(deadline_s=1.0))
+    r = _Req(0)
+    sched.submit(r, now=0.0)
+    got = sched.pop_admissible(lambda q: True)
+    got.first_admit_time = 0.1                    # engine admitted it
+    sched.requeue(got)                            # preempted much later
+    assert sched.expire(now=10.0) == []
+    assert sched.pop_admissible(lambda q: True) is r
+
+
+def test_scheduler_requeue_restores_head():
+    sched = Scheduler(SchedulerConfig())
+    a, b = _Req(0), _Req(1)
+    sched.submit(a, now=0.0)
+    sched.submit(b, now=0.0)
+    got = sched.pop_admissible(lambda r: True)
+    assert got is a
+    sched.requeue(got)                             # preempted
+    assert sched.pop_admissible(lambda r: True) is a
+
+
+def test_scheduler_priority_classes_served_in_order():
+    sched = Scheduler(SchedulerConfig(policy="priority"))
+    lo, hi = _Req(0, priority=5), _Req(1, priority=0)
+    sched.submit(lo, now=0.0)
+    sched.submit(hi, now=0.1)
+    assert sched.pop_admissible(lambda r: True) is hi
+
+
+# ---------------------------------------------------------------------------
+# engine: continuous batching over a real (tiny) decoder
+# ---------------------------------------------------------------------------
+
+import jax  # noqa: E402
+
+from repro.configs.base import ArchConfig  # noqa: E402
+from repro.models import build  # noqa: E402
+from repro.serving.engine import Engine, Request  # noqa: E402
+
+TINY = ArchConfig(
+    name="tiny-serve", family="dense", arch_kind="decoder",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, remat=False, dtype="float32")
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    m = build(TINY)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _prompt(rng, lo=2, hi=12):
+    return rng.integers(2, TINY.vocab_size,
+                        size=int(rng.integers(lo, hi))).astype(np.int32)
+
+
+def test_engine_admits_and_retires_mid_flight(tiny):
+    """The acceptance criterion: a short request completes while a long
+    one is still decoding, and a late submit is admitted mid-flight."""
+    m, params = tiny
+    eng = Engine(m, params, max_concurrency=2, max_len=64, eos_id=-1,
+                 page_size=8)
+    rng = np.random.default_rng(0)
+    long_req = Request(uid=0, prompt=_prompt(rng), max_new_tokens=24)
+    short_req = Request(uid=1, prompt=_prompt(rng), max_new_tokens=3)
+    assert eng.submit(long_req) and eng.submit(short_req)
+    while not short_req.done:
+        eng.step()
+    assert long_req.status == "running" and not long_req.done, \
+        "short request should retire while the long one decodes"
+    late = Request(uid=2, prompt=_prompt(rng), max_new_tokens=2)
+    assert eng.submit(late)
+    while not late.done:
+        eng.step()
+    assert not long_req.done, "late arrival admitted + retired mid-flight"
+    eng.run()
+    assert long_req.done and len(long_req.tokens) == 24
+    eng.kv.leak_check()
+    assert eng.kv.alloc.num_used == 0
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n_req=st.integers(1, 5),
+       eos=st.integers(-1, 255))
+def test_every_admitted_request_retires_exactly(tiny, seed, n_req, eos):
+    """Random admit/retire traffic: every accepted request finishes with
+    exactly max_new_tokens, or earlier on EOS; no page leaks; row slots
+    all free at drain."""
+    m, params = tiny
+    eng = Engine(m, params, max_concurrency=2, max_len=64, eos_id=eos,
+                 page_size=4, num_pages=17)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=i, prompt=_prompt(rng),
+                    max_new_tokens=int(rng.integers(1, 10)))
+            for i in range(n_req)]
+    accepted = [r for r in reqs if eng.submit(r)]
+    done = eng.run()
+    assert {r.uid for r in done} == {r.uid for r in accepted}
+    for r in done:
+        assert r.done and r.status == "done"
+        if len(r.tokens) < r.max_new_tokens:
+            assert r.tokens[-1] == eos, (r.tokens, eos)
+        else:
+            assert len(r.tokens) == r.max_new_tokens, \
+                "generated past max_new_tokens"
+    eng.kv.leak_check()
+    assert eng.kv.alloc.num_used == 0
+    assert all(r is None for r in eng.rows)
+
+
+def test_preemption_reproduces_greedy_tokens(tiny):
+    """Oversubscribed page pool: preempt-and-recompute must reproduce
+    the fully-provisioned greedy output token-for-token."""
+    m, params = tiny
+    rng = np.random.default_rng(3)
+    prompts = [_prompt(rng, 8, 12) for _ in range(2)]
+
+    def run(**kw):
+        eng = Engine(m, params, max_concurrency=2, max_len=64, eos_id=-1,
+                     **kw)
+        for i, p in enumerate(prompts):
+            assert eng.submit(Request(uid=i, prompt=p, max_new_tokens=12))
+        done = eng.run()
+        return [r.tokens for r in sorted(done, key=lambda r: r.uid)], eng
+
+    full, _ = run(page_size=4)
+    tight, eng = run(page_size=4, num_pages=8)   # 7 usable: forces oom
+    assert sum(r.preemptions for r in eng._done) > 0, \
+        "pool sizing did not force a preemption"
+    assert tight == full
+    eng.kv.leak_check()
+
+
+def test_submit_rejects_never_fitting_request(tiny):
+    """A request whose working set can never fit is refused at submit
+    (otherwise it wedges the FIFO head forever)."""
+    m, params = tiny
+    eng = Engine(m, params, max_concurrency=1, max_len=32, eos_id=-1,
+                 page_size=4, num_pages=4)        # 3 usable pages
+    big = Request(uid=0, prompt=np.arange(10, dtype=np.int32) + 2,
+                  max_new_tokens=20)              # needs 8 pages
+    assert not eng.submit(big)
+    assert big.status == "rejected" and eng.failed == [big]
+    ok = Request(uid=1, prompt=np.arange(4, dtype=np.int32) + 2,
+                 max_new_tokens=4)
+    assert eng.submit(ok)
+    done = eng.run()
+    assert [r.uid for r in done] == [1]
+
+
+def test_determinism_artifact_vs_in_memory_engine(tiny, tmp_path):
+    """Greedy decode through an ``.hnart`` cold start is token-identical
+    to the in-memory engine under the continuous-batching scheduler."""
+    from repro import artifact
+
+    cfg = TINY.hashed_variant(0.25)
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(1))
+    path = str(tmp_path / "tiny.hnart")
+    artifact.export_model(path, cfg, params)
+
+    rng = np.random.default_rng(7)
+    prompts = [_prompt(rng) for _ in range(4)]
+
+    def drive(eng):
+        for i, p in enumerate(prompts):
+            assert eng.submit(Request(uid=i, prompt=p, max_new_tokens=6))
+        done = eng.run()
+        return [r.tokens for r in sorted(done, key=lambda r: r.uid)]
+
+    live = drive(Engine(m, params, max_concurrency=2, max_len=64,
+                        eos_id=-1, page_size=8))
+    cold = drive(Engine.from_artifact(path, slots=2, max_len=64,
+                                      eos_id=-1, page_size=8))
+    assert cold == live
