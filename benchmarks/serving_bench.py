@@ -13,6 +13,12 @@ open-loop on a deterministic schedule (offered load ~ 2x what one row
 sustains, so queueing pressure grows with the request count, and p99
 spreads from p50 as concurrency saturates).
 
+A second section benches the **shared-prefix workload** (N users x one
+common system prompt — the millions-of-users common case): the same
+request set runs with ``prefix_cache`` on vs off (both with chunked
+prefill) and reports prefix-hit rate, pages saved, mean/p50 TTFT, and
+tok/s, plus a token-identity cross-check between the two arms.
+
     PYTHONPATH=src python -m benchmarks.serving_bench [--smoke]
 """
 from __future__ import annotations
@@ -60,6 +66,7 @@ def bench_level(model, params, cfg, *, concurrency: int, requests: int,
                        max_new_tokens=2))
     eng.run()
     eng._done.clear()
+    warm = eng.stats()          # counter baseline: report workload deltas
 
     # offered load: one request per gap, ~2x one row's sustained rate
     gap = 0.0 if requests <= concurrency else 0.01
@@ -74,6 +81,19 @@ def bench_level(model, params, cfg, *, concurrency: int, requests: int,
     wall = time.time() - t0
     stats = eng.stats()
     total_tokens = stats.pop("tokens")
+    # cumulative counters still include the warmup request; subtract the
+    # post-warmup baseline so every number in the row covers the same
+    # (timed) workload.  Gauges (pages_in_use, queue_depth, ...) and
+    # workload-only stats (latency percentiles, done) pass through.
+    counters = ("submitted", "admitted", "queue_rejected", "requeued",
+                "queue_expired", "prefill_chunks", "decoded_tokens",
+                "prefill_ticks", "decode_ticks", "interleaved_ticks",
+                "preemptions", "failed", "pages_fresh", "pages_shared",
+                "cow_copies", "hit_tokens", "miss_tokens",
+                "indexed_pages", "evictions")
+    for k in counters:
+        if k in stats:
+            stats[k] -= warm.get(k, 0)
     out = {"concurrency": concurrency, "requests": requests,
            "tokens": total_tokens,
            "wall_s": round(wall, 3),
@@ -83,14 +103,98 @@ def bench_level(model, params, cfg, *, concurrency: int, requests: int,
     return out
 
 
+def bench_shared_prefix(model, params, cfg, *, concurrency: int,
+                        users: int, sys_len: int, tail_len: int,
+                        max_new: int, max_len: int, page_size: int,
+                        prefill_chunk: int) -> dict:
+    """N users x one system prompt, prefix cache on vs off."""
+    rng = np.random.default_rng(1)
+    sys_prompt = rng.integers(2, cfg.vocab_size,
+                              size=sys_len).astype(np.int32)
+    prompts = [np.concatenate([sys_prompt, rng.integers(
+        2, cfg.vocab_size, size=tail_len).astype(np.int32)])
+        for _ in range(users)]
+
+    def run(prefix: bool):        # -> (stats dict, {uid: tokens})
+        eng = Engine(model, params, max_concurrency=concurrency,
+                     max_len=max_len, eos_id=-1, page_size=page_size,
+                     prefix_cache=prefix, prefill_chunk=prefill_chunk,
+                     scheduler=SchedulerConfig(max_queue=users + 2))
+        # warmup compiles this arm's whole steady state: the cold
+        # chunked prefill AND (prefix arm) the hit path — gather +
+        # tail-chunk bucket — via a second request sharing the prefix
+        warm_tail = np.asarray([2, 3] * (tail_len // 2 + 1),
+                               np.int32)[:tail_len]
+        for uid, tail in ((-1, warm_tail), (-2, warm_tail[::-1].copy())):
+            eng.submit(Request(
+                uid=uid, prompt=np.concatenate([sys_prompt, tail]),
+                max_new_tokens=2))
+        eng.run()
+        eng._done.clear()
+        # cumulative engine/tree counters include the warmup admissions;
+        # report workload-only deltas so the headline hit-rate and
+        # pages-saved numbers measure the measured requests alone
+        warm = eng.stats()
+
+        reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        t0 = time.time()
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        wall = time.time() - t0
+        eng.kv.leak_check()
+        stats = eng.stats()
+        tokens = stats.pop("tokens")
+
+        def delta(key):
+            return stats.get(key, 0) - warm.get(key, 0)
+
+        hit, miss = delta("hit_tokens"), delta("miss_tokens")
+        shared, fresh = delta("pages_shared"), delta("pages_fresh")
+        out = {"tok_per_s": round(tokens / wall, 2),
+               "wall_s": round(wall, 3),
+               "ttft_mean_s": round(stats.get("ttft_mean_s", 0.0), 4),
+               "ttft_p50_s": round(stats.get("ttft_p50_s", 0.0), 4),
+               "prefix_hit_rate": round(hit / (hit + miss), 4)
+               if hit + miss else 0.0,
+               "pages_shared": shared,
+               "pages_fresh": fresh,
+               "pages_saved_frac": round(shared / (shared + fresh), 4)
+               if shared + fresh else 0.0,
+               "prefill_chunks": delta("prefill_chunks"),
+               "preemptions": delta("preemptions")}
+        return out, {r.uid: list(r.tokens) for r in reqs}
+
+    off, toks_off = run(False)
+    on, toks_on = run(True)
+    row = {"concurrency": concurrency, "users": users,
+           "sys_prompt_len": sys_len, "tail_len": tail_len,
+           "max_new": max_new, "prefill_chunk": prefill_chunk,
+           "off": off, "on": on,
+           "tokens_match": toks_on == toks_off,
+           "pages_saved_frac": on["pages_saved_frac"],
+           "ttft_speedup": round(off["ttft_mean_s"]
+                                 / max(on["ttft_mean_s"], 1e-9), 3)}
+    print(f"shared-prefix @ c={concurrency}: saved "
+          f"{100 * row['pages_saved_frac']:.0f}% pages, hit rate "
+          f"{on['prefix_hit_rate']:.2f}, ttft {off['ttft_mean_s']:.3f}s "
+          f"-> {on['ttft_mean_s']:.3f}s "
+          f"({row['ttft_speedup']}x), match={row['tokens_match']}")
+    return row
+
+
 def main(smoke: bool = False, out_json: str = "BENCH_serving.json") -> dict:
     levels = (1, 2, 4) if smoke else (1, 4, 8)
     requests = 6 if smoke else 24
     max_new = 8 if smoke else 24
     results = {"smoke": smoke, "levels": list(levels), "configs": []}
+    dense = None                 # (model, params) reused for shared-prefix
     for tag, cfg in _configs():
         model = build(cfg)
         params = model.init(jax.random.PRNGKey(0))
+        if dense is None:
+            dense = (model, params, cfg)
         rows = []
         for c in levels:
             r = bench_level(model, params, cfg, concurrency=c,
@@ -103,6 +207,15 @@ def main(smoke: bool = False, out_json: str = "BENCH_serving.json") -> dict:
         results["configs"].append({"name": tag,
                                    "hashed": bool(cfg.hashed),
                                    "levels": rows})
+    # shared-prefix workload on the dense config (the prefix cache is
+    # model-agnostic; one arm suffices to track the trajectory)
+    model, params, cfg = dense
+    results["shared_prefix"] = bench_shared_prefix(
+        model, params, cfg, concurrency=8,
+        users=8 if smoke else 16,
+        sys_len=48 if smoke else 64, tail_len=8,
+        max_new=4 if smoke else 16, max_len=128, page_size=16,
+        prefill_chunk=32)
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2)
     print(f"wrote {os.path.abspath(out_json)}")

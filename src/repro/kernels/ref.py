@@ -96,3 +96,29 @@ def paged_attention_ref(q, pages_k, pages_v, page_table, lengths, window=0):
     probs = jnp.where(valid[:, None, None, :], probs, 0.0)
     out = jnp.einsum("bkgt,btkd->bkgd", probs, v)
     return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def paged_attention_shared_ref(q, pages_k, pages_v, page_table, lengths,
+                               window=0):
+    """Shared-page-aware oracle: rows may ALIAS physical pages (prefix
+    sharing maps one stored page into many rows' tables — the HashedNets
+    dedup idea applied to the KV pool).
+
+    Materializes every row's K/V into a fresh PRIVATE pool first —
+    breaking all aliasing — and runs the plain oracle per row over an
+    identity page table.  Ground truth for the copy-on-write invariant:
+    sharing may only change *where* a row's K/V is read from, never
+    *what* it reads, so any kernel must produce bitwise the same output
+    whether the table aliases pages across rows or each row owns
+    private copies.
+    """
+    b = q.shape[0]
+    maxp = page_table.shape[1]
+    ident = jnp.arange(maxp, dtype=jnp.int32)[None, :]
+    outs = []
+    for i in range(b):
+        priv_k = jnp.take(pages_k, page_table[i], axis=0)   # private copy
+        priv_v = jnp.take(pages_v, page_table[i], axis=0)
+        outs.append(paged_attention_ref(
+            q[i:i + 1], priv_k, priv_v, ident, lengths[i:i + 1], window))
+    return jnp.concatenate(outs, axis=0)

@@ -70,6 +70,14 @@ def main() -> int:
                    choices=("ref", "pallas"),
                    help="paged decode attention: gather oracle or the "
                         "paged-gather Pallas kernel")
+    p.add_argument("--prefix-cache", action="store_true",
+                   help="dedup shared prompt prefixes across requests "
+                        "(radix tree over KV pages, refcounts + "
+                        "copy-on-write; paged decoders only)")
+    p.add_argument("--prefill-chunk", type=int, default=None,
+                   help="prefill long prompts N tokens per tick, "
+                        "interleaved with decode (default: monolithic "
+                        "prefill; paged decoders only)")
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--max-len", type=int, default=256)
     p.add_argument("--temperature", type=float, default=0.0)
@@ -91,7 +99,8 @@ def main() -> int:
     engine_kwargs = dict(
         slots=concurrency, max_len=args.max_len, eos_id=-1,
         page_size=args.page_size, num_pages=args.num_pages,
-        attn_impl=args.attn_impl,
+        attn_impl=args.attn_impl, prefix_cache=args.prefix_cache,
+        prefill_chunk=args.prefill_chunk,
         scheduler=SchedulerConfig(policy=args.scheduler,
                                   max_queue=args.queue_limit,
                                   deadline_s=args.deadline))
@@ -165,9 +174,13 @@ def main() -> int:
         if cfg.num_image_tokens:
             extras = {"image_embeds": rng.standard_normal(
                 (1, cfg.num_image_tokens, cfg.d_model)).astype(np.float32)}
-        eng.submit(Request(uid=uid, prompt=prompt,
-                           max_new_tokens=args.max_new,
-                           temperature=args.temperature, extras=extras))
+        ok = eng.submit(Request(uid=uid, prompt=prompt,
+                                max_new_tokens=args.max_new,
+                                temperature=args.temperature,
+                                extras=extras))
+        if not ok:
+            print(f"req {uid}: REFUSED (queue full or request can never "
+                  f"fit the page pool — see --queue-limit/--num-pages)")
     done = eng.run()
     dt = time.time() - t0
     total_tokens = sum(len(r.tokens) for r in done)

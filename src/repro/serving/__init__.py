@@ -1,5 +1,5 @@
 from repro.serving import engine  # noqa: F401
 from repro.serving.engine import Engine, Request, generate_batch  # noqa: F401
 from repro.serving.paged_cache import (  # noqa: F401
-    PageAllocator, PagedKVCache, TRASH_PAGE)
+    PageAllocator, PagedKVCache, PrefixIndex, TRASH_PAGE)
 from repro.serving.scheduler import Scheduler, SchedulerConfig  # noqa: F401

@@ -14,6 +14,22 @@ Design (vLLM-style, adapted to XLA's static-shape world):
   re-enters the queue head to be re-prefilled later (greedy decode is
   reproducible across preemption; sampled decode draws fresh
   randomness).
+- **Prefix caching** (``prefix_cache=True``): a radix tree over token-id
+  page chunks dedups shared prompt prefixes — a new request whose feed
+  starts with an indexed prefix maps those pages by reference instead of
+  recomputing them (refcounted, copy-on-write on the boundary page; see
+  paged_cache).  Shared pages are read through the same page table, so
+  the decode kernels need no new math, and greedy output is
+  token-identical to the non-shared path by construction (prefix K/V is
+  bitwise what a fresh prefill would have produced).
+- **Chunked prefill** (``prefill_chunk=N``): long prompts prefill N
+  tokens per tick, interleaved with decode ticks for the already-running
+  rows — no head-of-line blocking on a long prompt.  Chunks write
+  straight into the row's (possibly shared) pages; positions covered by
+  a prefix hit are gathered from the tree's pages instead of recomputed.
+  Chunked prefill is bitwise-identical to monolithic prefill (each query
+  attends over the same full-width cache buffer either way; pinned in
+  tests/test_kernels.py).
 - Recurrent / encoder-decoder kinds (rwkv, zamba, encdec) keep the
   dense fixed-row cache (recurrent state is O(1) per row; paging buys
   nothing there).
@@ -24,7 +40,7 @@ Design (vLLM-style, adapted to XLA's static-shape world):
   knob decides who prefills next.  Finished rows free immediately — no
   head-of-line blocking on long generations.
 
-Prefill is bucketed pad-and-mask (one compile per 64-bucket) for pure
+Prefill is bucketed pad-and-mask (one compile per bucket) for pure
 decoders; sampling is greedy or temperature, fp32 logits.  All jitted
 functions are cache-functional (cache in, cache out) so the same engine
 code runs under pjit on a mesh.
@@ -40,7 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
-from repro.serving.paged_cache import PagedKVCache
+from repro.serving.paged_cache import TRASH_PAGE, PagedKVCache
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
 
@@ -55,13 +71,24 @@ class Request:
     tokens: Optional[List[int]] = None
     done: bool = False
     extras: Optional[Dict[str, Any]] = None   # frames / image_embeds
-    status: str = "new"       # queued/running/preempted/done/rejected/expired
+    status: str = "new"       # queued/prefilling/running/preempted/done/...
     submit_time: Optional[float] = None
     first_admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
     preemptions: int = 0
     truncated: bool = False             # force-retired at max_len
+
+
+@dataclasses.dataclass
+class _Prefill:
+    """In-flight chunked prefill for one row."""
+    req: Request
+    feed: np.ndarray          # prompt + pre-preemption tokens
+    target: int               # cached positions when complete (feed+extras)
+    pos: int                  # cached positions so far (starts at prefix hit)
+    cache: Any                # batch=1 scratch cache (None => zeros cache)
+    chunkable: bool           # bucketed decoder without extras
 
 
 def _slot_update(cache, slot_cache, slot_idx):
@@ -84,15 +111,17 @@ def _slot_update(cache, slot_cache, slot_idx):
 
 
 def _copy_pages(pages, ck, cv, pids):
-    """Scatter a prefilled row's K/V into its pages, one jitted call.
+    """Scatter a prefill scratch cache's K/V into pages, one jitted call.
 
     ck/cv: (nl, 1, max_len, n_kv, hd) from the batch=1 prefill cache;
-    pages: {"k","v"} (nl, P, ps, n_kv, hd); pids: (MAXP,) int32 — the
-    row's page-table row (logical page j -> physical page pids[j];
-    unused slots hold the trash page, whose contents are never read, so
-    the loop writes all MAXP slots unconditionally).  The fori_loop
-    carries the pools, so XLA bufferizes the updates in place — one
-    pool rewrite per prefill instead of one per page.
+    pages: {"k","v"} (nl, P, ps, n_kv, hd); pids: (MAXP,) int32 — logical
+    page j -> physical page pids[j].  Slots that must NOT be written
+    (shared prefix pages, pages outside the chunk being landed, unused
+    table slots) carry the trash page, whose contents are never read, so
+    the loop writes all MAXP slots unconditionally — one compile covers
+    every chunk shape.  The fori_loop carries the pools, so XLA
+    bufferizes the updates in place — one pool rewrite per call instead
+    of one per page.
     """
     nl, _, _, hkv, hd = ck.shape
     ps = pages["k"].shape[2]
@@ -115,15 +144,51 @@ def _copy_pages(pages, ck, cv, pids):
     return {"k": pk, "v": pv}
 
 
+def _gather_prefix(pages, pids, index):
+    """Materialize a row's (possibly shared) prefix K/V from pages into
+    a fresh batch=1 scratch cache so chunked prefill can resume at
+    ``index`` — the read side of prefix sharing.  Positions beyond the
+    hit hold stale pool bytes; they are either overwritten by the next
+    chunk's cache write or causally invisible, exactly like the zeros
+    scratch in the cold path."""
+    nl, _, ps, hkv, hd = pages["k"].shape
+    maxp = pids.shape[0]
+    gk = jnp.take(pages["k"], pids, axis=1).reshape(nl, 1, maxp * ps,
+                                                    hkv, hd)
+    gv = jnp.take(pages["v"], pids, axis=1).reshape(nl, 1, maxp * ps,
+                                                    hkv, hd)
+    return {"k": gk, "v": gv, "index": index}
+
+
+def _copy_page(pages, src, dst):
+    """Device copy of one physical page (the COW drain): page ``dst``
+    becomes a private replica of ``src`` across every layer."""
+    nl, _, ps, hkv, hd = pages["k"].shape
+
+    def one(pool):
+        chunk = jax.lax.dynamic_slice(pool, (0, src, 0, 0, 0),
+                                      (nl, 1, ps, hkv, hd))
+        return jax.lax.dynamic_update_slice(pool, chunk,
+                                            (0, dst, 0, 0, 0))
+
+    return {"k": one(pages["k"]), "v": one(pages["v"])}
+
+
 class Engine:
     BUCKET = 64
+    # chunk buckets: small powers of two below BUCKET, then BUCKET
+    # multiples (the monolithic ladder) — bounds prefill compiles while
+    # chunk offsets roam
+    _SUB_BUCKETS = (8, 16, 32)
 
     def __init__(self, model: Model, params, slots: int = 4,
                  max_len: int = 512, eos_id: int = 1, seed: int = 0, *,
                  max_concurrency: Optional[int] = None,
                  page_size: int = 16, num_pages: Optional[int] = None,
                  scheduler: Optional[SchedulerConfig] = None,
-                 attn_impl: str = "ref", paged: Optional[bool] = None):
+                 attn_impl: str = "ref", paged: Optional[bool] = None,
+                 prefix_cache: bool = False,
+                 prefill_chunk: Optional[int] = None):
         """max_concurrency (alias: slots) fixes the decode batch width.
 
         Paged knobs (decoder kinds): ``page_size`` tokens per KV page;
@@ -132,6 +197,10 @@ class Engine:
         oversubscribe memory and let preemption absorb the overflow.
         ``attn_impl``: "ref" (gather oracle) or "pallas" (paged-gather
         flash-decode kernel; interpret mode off-TPU).
+        ``prefix_cache`` dedups shared prompt prefixes across requests
+        (radix tree + refcounts + COW); ``prefill_chunk`` prefills long
+        prompts N tokens per tick interleaved with decode (None =
+        monolithic).  Both require the paged backend.
         """
         self.model = model
         self.params = params
@@ -143,6 +212,13 @@ class Engine:
         if self.paged and model.decode_paged is None:
             raise ValueError(
                 f"arch kind {model.cfg.arch_kind!r} has no paged decode")
+        if not self.paged and (prefix_cache or prefill_chunk is not None):
+            raise ValueError("prefix_cache/prefill_chunk require the "
+                             "paged backend (decoder kinds)")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1: {prefill_chunk}")
+        self.prefix_cache = prefix_cache
+        self.prefill_chunk = prefill_chunk
         self.sched = Scheduler(scheduler or SchedulerConfig())
         self.rows: List[Optional[Request]] = [None] * rows
         self._row_seq = [0] * rows      # admission order, for preemption
@@ -152,6 +228,8 @@ class Engine:
         self._failed: List[Request] = []
         self._tokens = np.zeros((rows, 1), np.int32)
         self._prefill = jax.jit(model.prefill)
+        self._prefilling: Dict[int, _Prefill] = {}
+        self._n_preempt = 0
 
         if self.paged:
             # page-aligned max_len keeps every prefill page copy in
@@ -160,7 +238,8 @@ class Engine:
             maxp = self.max_len // page_size
             if num_pages is None:
                 num_pages = rows * maxp + 1          # +1: trash page
-            self.kv = PagedKVCache(num_pages, page_size, rows, maxp)
+            self.kv = PagedKVCache(num_pages, page_size, rows, maxp,
+                                   prefix_cache=prefix_cache)
             self.pages = model.init_paged_cache(num_pages, page_size)
             self._prefill_cache = model.init_cache(1, self.max_len)
             # donate the page pools: without donation the functional
@@ -172,6 +251,8 @@ class Engine:
                     p, t, pg, tb, ln, attn_impl),
                 donate_argnums=(2,))
             self._page_copy = jax.jit(_copy_pages, donate_argnums=(0,))
+            self._gather = jax.jit(_gather_prefix)
+            self._cow_copy = jax.jit(_copy_page, donate_argnums=(0,))
         else:
             self.max_len = max_len
             self.cache = model.init_cache(rows, max_len)
@@ -198,7 +279,8 @@ class Engine:
         training state is involved (repro.artifact).  Quantized banks are
         dequantized at load: the model layers need real arrays (a
         keep-quantized engine path waits on an int8 decompress kernel).
-        Extra kwargs (page_size, scheduler, ...) pass through to Engine.
+        Extra kwargs (page_size, prefix_cache, prefill_chunk, scheduler,
+        ...) pass through to Engine.
         """
         from repro.artifact import io as artifact_io
         if registry_root is not None:
@@ -255,65 +337,199 @@ class Engine:
                  np.asarray(req.tokens, np.int32)])
         return np.asarray(req.prompt, np.int32)
 
+    def _prefix_ids(self, req: Request) -> Optional[np.ndarray]:
+        """Token ids for prefix matching/indexing, or None when the row
+        is ineligible: extras (image tokens shift every position, so the
+        feed ids don't spell the cached content) and non-bucketable
+        kinds stay out of the tree."""
+        if self.paged and self.kv.prefix is not None \
+                and self._can_bucket(req):
+            return self._feed(req)
+        return None
+
     def _can_admit(self, req: Request) -> bool:
         if not self.paged:
             return True
         feed = len(req.prompt) + len(req.tokens or ()) \
             + self._extra_tokens(req)
-        return self.kv.can_admit(feed)
+        return self.kv.can_admit(feed, token_ids=self._prefix_ids(req))
 
-    def _admit(self, now: float) -> None:
-        """Prefill queued requests into free rows (continuous batching).
-
-        Prompt lengths are bucketed to multiples of BUCKET with real
-        pad-and-mask (batch["length"] carries the true length into the
-        model), so prefill compiles once per bucket, not once per distinct
-        prompt length."""
-        for _ in range(self.sched.cfg.max_prefills_per_tick):
+    def _admit(self, now: float) -> int:
+        """Advance in-flight chunked prefills, then start new ones
+        (continuous batching).  At most ``max_prefills_per_tick`` chunk
+        steps run per tick — the prefill/decode interleave budget.
+        Returns the number of chunk steps taken."""
+        budget = self.sched.cfg.max_prefills_per_tick
+        chunks = 0
+        for row in sorted(self._prefilling,
+                          key=lambda r: self._row_seq[r]):
+            if chunks >= budget:
+                return chunks
+            self._advance_prefill(row)
+            chunks += 1
+        while chunks < budget:
             free = self._free_rows()
             if not free:
-                return
+                break
             req = self.sched.pop_admissible(self._can_admit)
             if req is None:
-                return
-            self._prefill_into(free[0], req, now)
+                break
+            if not self._begin_prefill(free[0], req, now):
+                # can_admit is optimistic under prefix sharing (shared
+                # and reclaimable pages may overlap); put the head back
+                self.sched.unpop(req)
+                break
+            chunks += 1
+        return chunks
 
-    def _prefill_into(self, row: int, req: Request, now: float) -> None:
+    # ------------------------------------------------------------------
+    def _begin_prefill(self, row: int, req: Request, now: float) -> bool:
+        """Bind a row: allocate/share pages, seed the scratch cache from
+        any prefix hit, and run the first chunk.  False if the pool came
+        up short (caller re-queues)."""
+        if not self.paged:
+            self._prefill_into_dense(row, req, now)
+            return True
+        feed = self._feed(req)
+        target = len(feed) + self._extra_tokens(req)
+        ids = self._prefix_ids(req)
+        if not self.kv.admit_row(row, target, token_ids=ids):
+            return False
+        hit = self.kv.row_meta[row].hit_tokens
+        cache = None
+        if hit > 0:
+            pids = self.kv.gather_table(row)
+            cache = self._gather(self.pages, jnp.asarray(pids),
+                                 jnp.asarray(hit, jnp.int32))
+            # the gather is dispatched; device ordering keeps it ahead
+            # of any later pool write, so the pin can drop now
+            self.kv.drop_tail_ref(row)
+        self._prefilling[row] = _Prefill(
+            req=req, feed=feed, target=target, pos=hit, cache=cache,
+            chunkable=self._can_bucket(req))
+        self.rows[row] = req
+        self._seq += 1
+        self._row_seq[row] = self._seq
+        req.status = "prefilling"
+        if req.first_admit_time is None:
+            req.first_admit_time = now
+        self._advance_prefill(row)
+        return True
+
+    def _chunk_shape(self, pos: int, c: int):
+        """Compile shape for a chunk of c tokens at cached position pos:
+        returns (start, bucket, length) with start + bucket <= max_len
+        (dynamic_update clamping would silently shift the write) and
+        length real tokens fed from ``start``.
+
+        Buckets come from a FIXED menu — small powers of two, 64
+        multiples, 8 multiples — so token-granular prefix-hit offsets
+        can't mint unbounded compile shapes.  When no menu bucket fits
+        between c and the remaining room, the window *slides back*
+        (start < pos): up to 7 already-cached positions are recomputed —
+        bitwise-identical values (the chunk-parity property), one extra
+        sliver of compute instead of a fresh XLA compile per distinct
+        hit length.  Monolithic prefill from position 0 keeps the legacy
+        64-multiple ladder (one compile per 64-bucket — pinned by the
+        artifact tests)."""
+        room = self.max_len - pos
+        if self.prefill_chunk is None and pos == 0:
+            b = max(min(-(-c // self.BUCKET) * self.BUCKET, room), c)
+            return 0, b, c
+        for b in self._SUB_BUCKETS:
+            if c <= b <= room:
+                return pos, b, c
+        mult = -(-c // self.BUCKET) * self.BUCKET
+        if mult <= room:
+            return pos, mult, c
+        b = min(-(-c // 8) * 8, pos + c)     # slide-back: 8-grid bucket
+        return pos + c - b, b, b
+
+    def _advance_prefill(self, row: int) -> None:
+        """One chunk step: compute ``c`` more feed positions against the
+        scratch cache, land their pages, and on completion sample the
+        first token and hand the row to decode."""
+        st = self._prefilling[row]
+        req = st.req
+        remaining = len(st.feed) - (st.pos if st.chunkable else 0)
+        c = remaining if (self.prefill_chunk is None or not st.chunkable) \
+            else min(self.prefill_chunk, remaining)
+        cache = st.cache if st.cache is not None else self._prefill_cache
+        if st.chunkable:
+            start, bucket, real = self._chunk_shape(st.pos, c)
+            if start != st.pos:
+                # slid-back window: rewind the write index; positions
+                # [start, pos) recompute to the same bytes
+                cache = dict(cache,
+                             index=jnp.asarray(start, jnp.int32))
+            toks = st.feed[start:start + real]
+            prompt = np.pad(toks, (0, bucket - real))
+            batch = {"tokens": jnp.asarray(prompt[None, :]),
+                     "cache": cache,
+                     "length": jnp.asarray(real, jnp.int32)}
+        else:
+            batch = {"tokens": jnp.asarray(st.feed[None, :]),
+                     "cache": cache}
+            if req.extras:
+                batch.update({k: jnp.asarray(v) for k, v in
+                              req.extras.items()})
+        logits, c1 = self._prefill(self.params, batch)
+        st.cache = c1
+        new_pos = int(np.asarray(c1["index"]))
+        # land the freshly computed positions' pages; shared prefix
+        # pages (slots below first_private_page) are never rewritten —
+        # write targets outside the chunk resolve to the trash page
+        lo = max(st.pos // self.kv.page_size,
+                 self.kv.first_private_page(row))
+        hi = self.kv.pages_for(new_pos)
+        wpids = np.full((self.kv.maxp,), TRASH_PAGE, np.int32)
+        wpids[lo:hi] = self.kv.table[row, lo:hi]
+        self.pages = self._page_copy(self.pages, c1["k"], c1["v"],
+                                     jnp.asarray(wpids))
+        st.pos = new_pos
+        if st.pos < st.target:
+            return
+        # prefill complete: publish the feed's full pages for reuse (the
+        # partial boundary page is published at release, once decode
+        # stops writing it), sample the first token, start decoding
+        del self._prefilling[row]
+        ids = self._prefix_ids(req)
+        if ids is not None:
+            full = (st.target // self.kv.page_size) * self.kv.page_size
+            self.kv.index_row(row, ids, full)
+        req.status = "running"
+        tok = self._sample(logits[:, -1], temps=[req.temperature])
+        req.tokens.append(int(tok[0]))
+        if req.first_token_time is None:
+            req.first_token_time = time.time()
+        self._tokens[row, 0] = int(tok[0])
+
+    def _prefill_into_dense(self, row: int, req: Request,
+                            now: float) -> None:
+        """Non-paged kinds (rwkv/zamba/encdec): monolithic prefill into
+        the batched dense cache (the pre-chunking path)."""
         feed = self._feed(req)
         p = len(feed)
         if self._can_bucket(req):
-            # clamp to the cache: a bucket can't exceed max_len (a
-            # prompt longer than max_len is a caller error either way)
             bucket = min(-(-p // self.BUCKET) * self.BUCKET, self.max_len)
             bucket = max(bucket, p)
             prompt = np.pad(feed, (0, bucket - p))
-            cache = self._prefill_cache if self.paged \
-                else self.model.init_cache(1, self.max_len)
             batch = {"tokens": jnp.asarray(prompt[None, :]),
-                     "cache": cache,
+                     "cache": self.model.init_cache(1, self.max_len),
                      "length": jnp.asarray(p, jnp.int32)}
         else:
-            cache = self._prefill_cache if self.paged \
-                else self.model.init_cache(1, self.max_len)
             batch = {"tokens": jnp.asarray(feed[None, :]),
-                     "cache": cache}
+                     "cache": self.model.init_cache(1, self.max_len)}
         if req.extras:
             batch.update({k: jnp.asarray(v) for k, v in
                           req.extras.items()})
         logits, c1 = self._prefill(self.params, batch)
         pos = int(np.asarray(c1["index"]))
-        if self.paged:
-            ok = self.kv.admit_row(row, pos)
-            assert ok, "pop_admissible admitted without pages"
-            self.pages = self._page_copy(
-                self.pages, c1["k"], c1["v"],
-                jnp.asarray(self.kv.table[row]))
+        self.cache = _slot_update(self.cache, c1, row)
+        if self.per_row:
+            self.cache["index"] = self.cache["index"].at[row].set(pos)
         else:
-            self.cache = _slot_update(self.cache, c1, row)
-            if self.per_row:
-                self.cache["index"] = self.cache["index"].at[row].set(pos)
-            else:
-                self.cache["index"] = c1["index"]
+            self.cache["index"] = c1["index"]
         self.rows[row] = req
         self._seq += 1
         self._row_seq[row] = self._seq
@@ -347,19 +563,47 @@ class Engine:
                           np.int32)
 
     # ------------------------------------------------------------------
+    def _history_ids(self, row: int) -> np.ndarray:
+        """Token ids spelling the row's cached positions (prompt plus
+        generated tokens, clipped to what has actually been written)."""
+        req = self.rows[row]
+        ids = np.concatenate([np.asarray(req.prompt, np.int32),
+                              np.asarray(req.tokens or [], np.int32)])
+        return ids[:int(self.kv.lengths[row])]
+
+    def _publish_row(self, row: int) -> None:
+        """Index everything the row cached — full pages AND the partial
+        boundary page — before its references drop.  Called when writes
+        to the row's pages are provably over (finish/preempt)."""
+        req = self.rows[row]
+        if req is None or self._prefix_ids(req) is None:
+            return
+        if row in self._prefilling:
+            st = self._prefilling[row]
+            self.kv.index_row(row, st.feed[:st.pos], st.pos)
+        else:
+            ids = self._history_ids(row)
+            self.kv.index_row(row, ids, len(ids))
+
     def _preempt(self, row: int) -> None:
         req = self.rows[row]
+        self._publish_row(row)           # landed pages serve the resume
+        self._prefilling.pop(row, None)
         self.rows[row] = None
         self.kv.release_row(row)
         req.status = "preempted"
         req.preemptions += 1
+        self._n_preempt += 1
         self.sched.requeue(req)
 
     def _finish(self, row: int, truncated: bool = False) -> None:
         req = self.rows[row]
-        self.rows[row] = None
         if self.paged:
+            self._publish_row(row)
+            self.rows[row] = None
             self.kv.release_row(row)
+        else:
+            self.rows[row] = None
         req.done = True
         req.truncated = truncated
         req.status = "done"
@@ -368,7 +612,8 @@ class Engine:
 
     def _ensure_room(self, active: List[int]) -> List[int]:
         """Paged backend: make every active row's next write position
-        addressable, preempting youngest-first on pool exhaustion."""
+        addressable and privately writable (COW), preempting
+        youngest-first on pool exhaustion."""
         for i in list(active):
             if self.rows[i] is None:        # preempted by an earlier row
                 continue
@@ -387,29 +632,56 @@ class Engine:
                     break
         return [i for i in active if self.rows[i] is not None]
 
+    def _drain_cow(self) -> None:
+        """Perform queued copy-on-write page copies before anything
+        writes the pool (decode's token write must hit the private
+        replica, never the shared original)."""
+        for src, dst in self.kv.pending_copies:
+            self.pages = self._cow_copy(self.pages,
+                                        jnp.asarray(src, jnp.int32),
+                                        jnp.asarray(dst, jnp.int32))
+        self.kv.pending_copies.clear()
+
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine tick: expire, admit, decode all active rows,
-        retire.  Returns the number of rows decoded."""
+        """One engine tick: expire, admit/advance prefills, decode all
+        running rows, retire.  Returns the number of rows decoded."""
         now = time.time()
         for r in self.sched.expire(now):
             r.status = "expired"
             self._failed.append(r)
-        self._admit(now)
+        chunks = self._admit(now)
         # retire BEFORE decoding: a prefill that already satisfied the
         # request (max_new_tokens == 1, or EOS as the first token) must
         # not decode a surplus token
         self._retire()
-        active = [i for i, r in enumerate(self.rows) if r is not None]
+        active = [i for i, r in enumerate(self.rows)
+                  if r is not None and i not in self._prefilling]
         if not active:
+            self.sched.account(chunks, 0)
             return 0
         if self.paged:
             active = self._ensure_room(active)
+            # drain queued COW copies in the SAME tick they were queued,
+            # even when every row got preempted: a stale copy whose
+            # target was released and re-allocated next tick would
+            # clobber the new occupant's freshly prefilled K/V
+            self._drain_cow()
             if not active:
+                self.sched.account(chunks, 0)
                 return 0
+            table, lengths = self.kv.table, self.kv.lengths
+            if self._prefilling:
+                # rows mid-prefill must not write garbage K/V into their
+                # (real) pages, nor attend: point them at the trash page
+                table = table.copy()
+                lengths = lengths.copy()
+                for i in self._prefilling:
+                    table[i, :] = TRASH_PAGE
+                    lengths[i] = 0
             logits, self.pages = self._decode_paged(
                 self.params, jnp.asarray(self._tokens), self.pages,
-                jnp.asarray(self.kv.table), jnp.asarray(self.kv.lengths))
+                jnp.asarray(table), jnp.asarray(lengths))
             toks = self._sample(logits[:, -1])
             for i in active:
                 self.kv.advance(i)
@@ -423,11 +695,12 @@ class Engine:
                 self.rows[i].tokens.append(int(toks[i]))
                 self._tokens[i, 0] = int(toks[i])
         self._retire()
+        self.sched.account(chunks, len(active))
         return len(active)
 
     def _retire(self) -> None:
         for i, r in enumerate(self.rows):
-            if r is None:
+            if r is None or i in self._prefilling:
                 continue
             if (r.tokens and r.tokens[-1] == self.eos_id) \
                     or len(r.tokens) >= r.max_new_tokens:
@@ -452,12 +725,12 @@ class Engine:
                if r.finish_time and r.submit_time]
         ttft = [r.first_token_time - r.submit_time for r in self._done
                 if r.first_token_time and r.submit_time]
-        live = [r for r in self.rows if r is not None]
         out = {
             "done": len(self._done),
             "failed": len(self._failed),
-            "preemptions": sum(r.preemptions for r in
-                               self._done + self._failed + live),
+            # engine-level counter: per-request sums would miss requests
+            # preempted (possibly mid-chunked-prefill) and still queued
+            "preemptions": self._n_preempt,
             "tokens": sum(len(r.tokens) for r in self._done),
         }
         if lat:
@@ -465,9 +738,12 @@ class Engine:
             out["latency_p99_s"] = float(np.percentile(lat, 99))
         if ttft:
             out["ttft_p50_s"] = float(np.percentile(ttft, 50))
+            out["ttft_mean_s"] = float(np.mean(ttft))
+        out.update(self.sched.snapshot())
         if self.paged:
             out["pages_in_use"] = self.kv.alloc.num_used
             out["pages_free"] = self.kv.alloc.num_free
+            out.update(self.kv.prefix_stats())
         return out
 
 

@@ -17,6 +17,13 @@ serve a dead client).
 Preempted requests re-enter at the *head* of their class: they were
 admitted before anything still queued there, so head placement restores
 arrival order.
+
+The scheduler also keeps the prefill/decode interleave accounting: the
+engine reports every tick (``account``) how many prefill chunk steps ran
+and how many rows decoded, and ``snapshot`` exposes the tick split
+(prefill-only / decode-only / interleaved) plus queue-event counters —
+the observability surface for tuning ``max_prefills_per_tick`` and
+``prefill_chunk`` against head-of-line blocking.
 """
 from __future__ import annotations
 
@@ -45,6 +52,12 @@ class Scheduler:
     def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
         self.cfg = cfg
         self._classes: Dict[int, deque] = {}
+        self.counters: Dict[str, int] = {
+            "submitted": 0, "queue_rejected": 0, "requeued": 0,
+            "queue_expired": 0, "admitted": 0,
+            "prefill_chunks": 0, "decoded_tokens": 0,
+            "prefill_ticks": 0, "decode_ticks": 0, "interleaved_ticks": 0,
+        }
 
     def __len__(self) -> int:
         return sum(len(q) for q in self._classes.values())
@@ -56,13 +69,24 @@ class Scheduler:
     def submit(self, req, now: float) -> bool:
         """Enqueue; False = rejected by backpressure (queue full)."""
         if len(self) >= self.cfg.max_queue:
+            self.counters["queue_rejected"] += 1
             return False
         req.submit_time = now
         self._classes.setdefault(self._class(req), deque()).append(req)
+        self.counters["submitted"] += 1
         return True
 
     def requeue(self, req) -> None:
         """Return a preempted request to the head of its class."""
+        self.counters["requeued"] += 1
+        self._classes.setdefault(self._class(req), deque()).appendleft(req)
+
+    def unpop(self, req) -> None:
+        """Put back a popped head that could not actually be admitted
+        (the engine's admission gate is optimistic under prefix
+        sharing): restores arrival order and retracts the admission
+        count without recording a preemption-style requeue."""
+        self.counters["admitted"] -= 1
         self._classes.setdefault(self._class(req), deque()).appendleft(req)
 
     def expire(self, now: float) -> List:
@@ -85,6 +109,7 @@ class Scheduler:
                     kept.append(r)
             q.clear()
             q.extend(kept)
+        self.counters["queue_expired"] += len(dead)
         return dead
 
     def pop_admissible(self, can_admit: Callable) -> Optional[object]:
@@ -94,8 +119,28 @@ class Scheduler:
         for prio in sorted(self._classes):
             q = self._classes[prio]
             if q and can_admit(q[0]):
+                self.counters["admitted"] += 1
                 return q.popleft()
         return None
 
     def depth_by_class(self) -> Dict[int, int]:
         return {p: len(q) for p, q in self._classes.items() if q}
+
+    # ------------------------------------------------------------------
+    def account(self, prefill_chunks: int, decoded_rows: int) -> None:
+        """Record one engine tick's prefill/decode interleave: how many
+        prefill chunk steps ran and how many rows decoded."""
+        self.counters["prefill_chunks"] += prefill_chunks
+        self.counters["decoded_tokens"] += decoded_rows
+        if prefill_chunks and decoded_rows:
+            self.counters["interleaved_ticks"] += 1
+        elif prefill_chunks:
+            self.counters["prefill_ticks"] += 1
+        elif decoded_rows:
+            self.counters["decode_ticks"] += 1
+
+    def snapshot(self) -> Dict[str, int]:
+        """Counters + current depth, for Engine.stats()."""
+        out = dict(self.counters)
+        out["queue_depth"] = len(self)
+        return out

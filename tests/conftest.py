@@ -22,6 +22,13 @@ def _clear_jax_caches_between_modules():
 # we install a minimal deterministic stand-in: each @given test runs
 # `max_examples` examples drawn from a per-test seeded PRNG.  With the real
 # package installed this shim is inert.
+#
+# The shim also covers `hypothesis.stateful` (RuleBasedStateMachine /
+# rule / precondition / invariant): the stand-in's TestCase runs a fixed
+# number of deterministic episodes, each a random walk over the rules
+# whose preconditions hold, drawing rule arguments from the same seeded
+# strategies and checking every @invariant after every step — the
+# deterministic mode the serving refcount state machine falls back to.
 
 def _install_hypothesis_stub():
     import functools
@@ -102,6 +109,95 @@ def _install_hypothesis_stub():
             return wrapper
         return deco
 
+    # -- stateful: deterministic random-walk stand-in ----------------------
+
+    def rule(**strategies):
+        def deco(fn):
+            fn._stub_rule = strategies
+            return fn
+        return deco
+
+    def initialize(**strategies):
+        def deco(fn):
+            fn._stub_rule = strategies
+            fn._stub_initialize = True
+            return fn
+        return deco
+
+    def precondition(pred):
+        def deco(fn):
+            fn._stub_precond = pred
+            return fn
+        return deco
+
+    def invariant():
+        def deco(fn):
+            fn._stub_invariant = True
+            return fn
+        return deco
+
+    def _make_test_case(machine_cls):
+        import unittest
+
+        class Case(unittest.TestCase):
+            settings = None
+
+            def test_state_machine(self):
+                names = sorted(n for n in dir(machine_cls)
+                               if getattr(getattr(machine_cls, n),
+                                          "_stub_rule", None) is not None)
+                inits = [n for n in names
+                         if getattr(getattr(machine_cls, n),
+                                    "_stub_initialize", False)]
+                steps = [n for n in names if n not in inits]
+                invs = [n for n in dir(machine_cls)
+                        if getattr(getattr(machine_cls, n),
+                                   "_stub_invariant", False)]
+                rng = random.Random(
+                    zlib.crc32(machine_cls.__name__.encode()) & 0x7FFFFFFF)
+                for _ in range(12):                     # episodes
+                    m = machine_cls()
+                    try:
+                        def fire(name):
+                            fn = getattr(m, name)
+                            pred = getattr(fn, "_stub_precond", None)
+                            if pred is not None and not pred(m):
+                                return
+                            fn(**{k: s.example(rng) for k, s in
+                                  fn._stub_rule.items()})
+                            for inv in invs:
+                                getattr(m, inv)()
+
+                        for name in inits:
+                            fire(name)
+                        for _ in range(60):             # steps per episode
+                            fire(steps[rng.randrange(len(steps))])
+                    finally:
+                        m.teardown()
+
+        Case.__name__ = machine_cls.__name__ + "TestCase"
+        Case.__qualname__ = Case.__name__
+        return Case
+
+    class _MachineMeta(type):
+        @property
+        def TestCase(cls):
+            return _make_test_case(cls)
+
+    class RuleBasedStateMachine(metaclass=_MachineMeta):
+        def __init__(self):
+            pass
+
+        def teardown(self):
+            pass
+
+    stateful = types.ModuleType("hypothesis.stateful")
+    stateful.RuleBasedStateMachine = RuleBasedStateMachine
+    stateful.rule = rule
+    stateful.initialize = initialize
+    stateful.precondition = precondition
+    stateful.invariant = invariant
+
     strat = types.ModuleType("hypothesis.strategies")
     strat.integers = integers
     strat.sampled_from = sampled_from
@@ -114,11 +210,13 @@ def _install_hypothesis_stub():
     hyp.given = given
     hyp.settings = settings
     hyp.strategies = strat
+    hyp.stateful = stateful
     hyp.HealthCheck = types.SimpleNamespace(too_slow=None)
     hyp.__stub__ = True
 
     sys.modules["hypothesis"] = hyp
     sys.modules["hypothesis.strategies"] = strat
+    sys.modules["hypothesis.stateful"] = stateful
 
 
 try:  # pragma: no cover - depends on environment

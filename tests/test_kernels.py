@@ -277,6 +277,156 @@ def test_paged_attention_idle_rows_finite():
         np.testing.assert_array_equal(np.asarray(out)[1], 0.0)
 
 
+def _mk_shared_paged(seed, *, b, ps, maxp, n_kv, g, d, shared_pages,
+                     dtype=jnp.float32):
+    """Like _mk_paged but every row's table ALIASES the same leading
+    ``shared_pages`` physical pages (prefix sharing), with private pages
+    after; lengths all extend past the shared region."""
+    rng = np.random.default_rng(seed)
+    num_pages = 1 + shared_pages + b * (maxp - shared_pages)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    pk = jax.random.normal(ks[0], (num_pages, ps, n_kv, d)).astype(dtype)
+    pv = jax.random.normal(ks[1], (num_pages, ps, n_kv, d)).astype(dtype)
+    q = jax.random.normal(ks[2], (b, n_kv * g, d)).astype(dtype)
+    lengths = rng.integers(shared_pages * ps + 1, maxp * ps + 1, size=b)
+    lengths = np.asarray(lengths, np.int32)
+    table = np.zeros((b, maxp), np.int32)
+    pool = list(range(1 + shared_pages, num_pages))
+    rng.shuffle(pool)
+    for i in range(b):
+        table[i, :shared_pages] = np.arange(1, 1 + shared_pages)
+        n = -(-int(lengths[i]) // ps)
+        for j in range(shared_pages, n):
+            table[i, j] = pool.pop()
+    return q, pk, pv, jnp.asarray(table), jnp.asarray(lengths)
+
+
+@pytest.mark.parametrize("shared,window", [(1, 0), (2, 0), (3, 0), (2, 5)])
+def test_paged_attention_shared_prefix_tables(shared, window):
+    """Prefix sharing aliases one physical page into many rows' tables;
+    kernel and plain oracle must read through the aliases bitwise as if
+    each row owned private copies (the shared-page-aware oracle)."""
+    q, pk, pv, table, lengths = _mk_shared_paged(
+        23 + shared, b=3, ps=4, maxp=4, n_kv=2, g=2, d=16,
+        shared_pages=shared)
+    want = ref.paged_attention_shared_ref(q, pk, pv, table, lengths,
+                                          window)
+    got_ref = ref.paged_attention_ref(q, pk, pv, table, lengths, window)
+    np.testing.assert_array_equal(np.asarray(got_ref), np.asarray(want))
+    got_pal = paged_decode_attention(q, pk, pv, table, lengths,
+                                     jnp.int32(window), interpret=True)
+    rtol, atol = _tol(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got_pal), np.asarray(want),
+                               rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill parity (serving engine prefill path)
+# ---------------------------------------------------------------------------
+
+from repro.configs.base import ArchConfig  # noqa: E402
+from repro.models import build as build_model  # noqa: E402
+from repro.serving.engine import Engine, _copy_pages  # noqa: E402
+
+_PS = 8
+_CHUNK_MAX_LEN = 64
+
+
+def _chunk_cfg(dtype, n_kv, window=0, global_every=0):
+    return ArchConfig(
+        name=f"tiny-chunk-{dtype}-{n_kv}-{window}", family="dense",
+        arch_kind="decoder", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=n_kv, head_dim=16, d_ff=128, vocab_size=128,
+        remat=False, dtype=dtype, sliding_window=window,
+        global_every=global_every)
+
+
+def _chunk_shape(pos, c, chunk):
+    """The engine's own chunk-shape ladder (invoked unbound on a stub
+    so the test exercises exactly the shipped compile shapes — a
+    hand-copied ladder here could silently drift)."""
+    import types
+    stub = types.SimpleNamespace(max_len=_CHUNK_MAX_LEN,
+                                 prefill_chunk=chunk,
+                                 BUCKET=Engine.BUCKET,
+                                 _SUB_BUCKETS=Engine._SUB_BUCKETS)
+    return Engine._chunk_shape(stub, pos, c)
+
+
+def _prefill_in_chunks(model, params, feed, chunk):
+    """Replicate the engine's chunked prefill: bucketed pad-and-mask
+    chunks against a carried scratch cache, each chunk's pages landed
+    through the engine's masked page-write."""
+    prefill = jax.jit(model.prefill)
+    maxp = _CHUNK_MAX_LEN // _PS
+    pages = model.init_paged_cache(1 + maxp, _PS)
+    table = np.arange(1, 1 + maxp, dtype=np.int32)     # row owns 1..maxp
+    cache = model.init_cache(1, _CHUNK_MAX_LEN)
+    pos, t = 0, len(feed)
+    logits = None
+    while pos < t:
+        c = min(chunk, t - pos)
+        start, bucket, real = _chunk_shape(pos, c, chunk)
+        if start != pos:                 # slid-back window
+            cache = dict(cache, index=jnp.asarray(start, jnp.int32))
+        prompt = np.pad(feed[start:start + real], (0, bucket - real))
+        logits, cache = prefill(params, {
+            "tokens": jnp.asarray(prompt[None, :]), "cache": cache,
+            "length": jnp.asarray(real, jnp.int32)})
+        lo, hi = pos // _PS, -(-(pos + c) // _PS)
+        wpids = np.zeros((maxp,), np.int32)
+        wpids[lo:hi] = table[lo:hi]
+        pages = _copy_pages(pages, cache["k"], cache["v"],
+                            jnp.asarray(wpids))
+        pos += c
+    return logits, cache, pages
+
+
+@pytest.mark.parametrize("dtype,n_kv,window,ge", [
+    (jnp.float32, 2, 0, 0),
+    (jnp.float32, 1, 0, 0),
+    (jnp.bfloat16, 2, 0, 0),
+    (jnp.bfloat16, 1, 0, 0),
+    (jnp.float32, 2, 6, 2),          # sliding-window + global mix
+])
+def test_chunked_prefill_bitwise_parity(dtype, n_kv, window, ge):
+    """A prompt prefilled in chunks of {1, ps-1, ps, 3*ps} produces
+    bitwise-identical KV pages and logits to monolithic prefill — every
+    query attends over the same full-width cache buffer either way, so
+    chunking (and therefore prefix reuse, which serves previously
+    chunk-computed pages) cannot perturb greedy decoding."""
+    name = "float32" if dtype == jnp.float32 else "bfloat16"
+    model = build_model(_chunk_cfg(name, n_kv, window, ge))
+    params = model.init(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(7)
+    t = 3 * _PS + 3                                     # partial tail page
+    feed = rng.integers(2, 128, size=t).astype(np.int32)
+
+    logits_m, cache_m, pages_m = _prefill_in_chunks(model, params, feed, t)
+    for chunk in (1, _PS - 1, _PS, 3 * _PS):
+        logits_c, cache_c, pages_c = _prefill_in_chunks(
+            model, params, feed, chunk)
+        np.testing.assert_array_equal(
+            np.asarray(logits_m, np.float32),
+            np.asarray(logits_c, np.float32), err_msg=f"chunk={chunk}")
+        for key in ("k", "v"):
+            np.testing.assert_array_equal(
+                np.asarray(cache_m[key], np.float32)[:, :, :t],
+                np.asarray(cache_c[key], np.float32)[:, :, :t],
+                err_msg=f"cache {key} chunk={chunk}")
+            # pages compare on every readable position: the row's table
+            # in order, flattened back to sequence layout, up to the
+            # feed.  Offsets past the feed are pad garbage that lengths
+            # masking keeps unreadable (and differ by bucket pattern).
+            pm = np.asarray(pages_m[key], np.float32)
+            pc = np.asarray(pages_c[key], np.float32)
+            nl, _, ps, hkv, hd = pm.shape
+            np.testing.assert_array_equal(
+                pm[:, 1:].reshape(nl, -1, hkv, hd)[:, :t],
+                pc[:, 1:].reshape(nl, -1, hkv, hd)[:, :t],
+                err_msg=f"pages {key} chunk={chunk}")
+
+
 def test_kernel_matches_core_paths():
     """pallas == scan == materialize through the core dispatcher."""
     from repro.core import matmul

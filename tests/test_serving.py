@@ -319,6 +319,223 @@ def test_submit_rejects_never_fitting_request(tiny):
     assert [r.uid for r in done] == [1]
 
 
+# ---------------------------------------------------------------------------
+# prefix index (radix tree over KV pages)
+# ---------------------------------------------------------------------------
+
+from repro.serving.paged_cache import PageAllocator as _PA  # noqa: E402
+from repro.serving.paged_cache import PrefixIndex  # noqa: E402
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 10 ** 6), ps=st.sampled_from([2, 4]),
+       n_seq=st.integers(1, 6))
+def test_prefix_index_match_is_longest_indexed_prefix(seed, ps, n_seq):
+    """After inserting sequences over a tiny alphabet, match() returns
+    exactly the pages of the longest indexed full-page prefix, and the
+    tree's refcount claims always verify against the allocator."""
+    rng = np.random.default_rng(seed)
+    alloc = _PA(64)
+    idx = PrefixIndex(ps, alloc)
+    indexed = {}                         # chunk-path tuple -> page
+    for _ in range(n_seq):
+        toks = rng.integers(0, 3, size=int(rng.integers(1, 5 * ps)))
+        pages = alloc.alloc(-(-len(toks) // ps))
+        idx.insert(toks, pages, len(toks))
+        for j in range(len(toks) // ps):
+            key = tuple(toks[:(j + 1) * ps])
+            indexed.setdefault(key, pages[j])
+        alloc.free(pages)                # tree refs keep indexed pages
+    probe = rng.integers(0, 3, size=int(rng.integers(1, 6 * ps)))
+    fulls, tail = idx.match(probe)
+    assert len(fulls) <= len(probe) // ps
+    for j, page in enumerate(fulls):
+        assert indexed[tuple(probe[:(j + 1) * ps])] == page
+    if len(fulls) < len(probe) // ps:          # stopped: next page unindexed
+        assert tuple(probe[:(len(fulls) + 1) * ps]) not in indexed
+    if tail is not None:
+        page, use = tail
+        assert 0 < use < ps and alloc.refcount(page) >= 1
+    # every tree page is allocator-held exactly once by the tree
+    for p in idx.pages():
+        assert alloc.refcount(p) == 1
+
+
+def test_prefix_index_evicts_lru_only_unreferenced():
+    """Eviction reclaims least-recently-used tree-only pages leaf-first;
+    pages a row still maps (refcount > 1) are never touched."""
+    alloc = _PA(8)
+    idx = PrefixIndex(2, alloc)
+    old = alloc.alloc(2)
+    idx.insert(np.array([0, 1, 0, 1]), old, 4)
+    alloc.free(old)                      # tree-only now (LRU)
+    new = alloc.alloc(2)
+    idx.insert(np.array([2, 3, 2, 3]), new, 4)   # fresher, row-held
+    assert idx.evictable() == 2          # only the tree-only pages
+    assert idx.evict(1) == 1             # drops old's LEAF, parent stays
+    fulls, _ = idx.match(np.array([2, 3, 2, 3]))
+    assert fulls == new, "eviction touched a row-held entry"
+    fulls, _ = idx.match(np.array([0, 1, 0, 1]))
+    assert fulls == old[:1], "leaf-first LRU should keep the parent"
+    assert idx.evict(5) == 1             # parent became a leaf: reclaimed
+    fulls, _ = idx.match(np.array([0, 1, 0, 1]))
+    assert fulls == []
+    alloc.free(new)                      # row drops; tree still holds
+    assert alloc.num_used == idx.num_pages == 2
+
+
+@settings(**SETTINGS)
+@given(num_pages=st.integers(6, 24), seed=st.integers(0, 10 ** 6))
+def test_paged_cache_prefix_admit_share_release(num_pages, seed):
+    """Random admit-with-sharing / publish / release sequences conserve
+    refcounts (leak_check) and shared mappings never exceed what the
+    tree indexed."""
+    ps, rows, maxp = 4, 3, 4
+    kv = PagedKVCache(num_pages, ps, rows, maxp, prefix_cache=True)
+    rng = np.random.default_rng(seed)
+    toks = {}
+    for _ in range(60):
+        op = rng.random()
+        bound = sorted(kv.row_pages)
+        free_rows = [r for r in range(rows) if r not in kv.row_pages]
+        if op < 0.45 and free_rows:
+            n = int(rng.integers(1, maxp * ps))
+            ids = rng.integers(0, 2, size=n)         # collision-heavy
+            if kv.admit_row(free_rows[0], n, token_ids=ids):
+                r = free_rows[0]
+                kv.drop_tail_ref(r)
+                toks[r] = list(ids)
+                assert kv.row_meta[r].hit_tokens <= max(n - 1, 0)
+        elif op < 0.7 and bound:
+            r = bound[int(rng.integers(len(bound)))]
+            if kv.ensure_decode_room(r) == "ok":
+                kv.pending_copies.clear()
+                kv.advance(r)
+                toks[r].append(int(rng.integers(0, 2)))
+        elif op < 0.85 and bound:
+            r = bound[int(rng.integers(len(bound)))]
+            n = int(kv.lengths[r])
+            kv.index_row(r, np.asarray(toks[r][:n]), n)
+        elif bound:
+            r = bound[int(rng.integers(len(bound)))]
+            kv.release_row(r)
+            del toks[r]
+        kv.leak_check()
+    for r in list(kv.row_pages):
+        kv.release_row(r)
+    kv.leak_check()
+    assert kv.alloc.num_used == kv.prefix.num_pages
+
+
+def test_engine_prefix_cache_survives_request_lifetime(tiny):
+    """Sequential identical prompts: the first request's pages outlive
+    it in the tree, so the second admission maps them by reference and
+    still decodes token-identically."""
+    m, params = tiny
+    rng = np.random.default_rng(5)
+    prompt = _prompt(rng, 18, 19)
+
+    def run(prefix):
+        eng = Engine(m, params, max_concurrency=1, max_len=64, eos_id=-1,
+                     page_size=8, prefix_cache=prefix)
+        outs = []
+        for uid in range(2):             # strictly sequential lifetimes
+            req = Request(uid=uid, prompt=prompt.copy(), max_new_tokens=5)
+            assert eng.submit(req)
+            eng.run()
+            outs.append(req.tokens)
+        eng.kv.leak_check()
+        return outs, eng
+
+    base, _ = run(False)
+    got, eng = run(True)
+    assert got == base
+    stats = eng.stats()
+    assert stats["hit_tokens"] > 0, "second admission missed the tree"
+    assert stats["pages_shared"] >= 2
+    # drained engine holds exactly the tree's retained pages
+    assert eng.kv.alloc.num_used == eng.kv.prefix.num_pages > 0
+
+
+def _run_sequential_pair(m, params, prompt, *, prefix, rows):
+    eng = Engine(m, params, max_concurrency=rows, max_len=64, eos_id=-1,
+                 page_size=8, prefix_cache=prefix)
+    outs = []
+    for uid in range(2):
+        req = Request(uid=uid, prompt=prompt.copy(), max_new_tokens=4)
+        assert eng.submit(req)
+        eng.run()
+        outs.append(req.tokens)
+        assert req.status == "done", req.status
+    eng.kv.leak_check()
+    return outs, eng
+
+
+def test_engine_prefix_hit_near_max_len_slide_back(tiny):
+    """A prefix hit that leaves the resume chunk pressed against the
+    cache edge forces the slid-back bucket (start < pos, fixed 8-grid
+    shape): output must still match the prefix-off engine."""
+    m, params = tiny
+    rng = np.random.default_rng(13)
+    prompt = _prompt(rng, 60, 61)       # 60 + 4 new tokens == max_len
+    # rows=2 leaves spare pool pages, so the partial-tail pin survives
+    # admission: hit 59 -> resume c=1 at pos 59, room 5 -> no menu
+    # bucket fits -> the window must slide back
+    base, _ = _run_sequential_pair(m, params, prompt, prefix=False,
+                                   rows=2)
+    got, eng = _run_sequential_pair(m, params, prompt, prefix=True,
+                                    rows=2)
+    assert got == base
+    assert eng.stats()["hit_tokens"] >= 59
+
+
+def test_engine_admission_survives_tail_pin_on_drained_pool(tiny):
+    """Livelock regression: with the whole pool retained by the tree
+    for this very prompt, the partial-tail pin would hold the last
+    reclaimable page hostage — admission must drop the pin (trading the
+    tail reuse) rather than fail forever."""
+    m, params = tiny
+    rng = np.random.default_rng(13)
+    prompt = _prompt(rng, 60, 61)       # needs all 8 pages of the pool
+    base, _ = _run_sequential_pair(m, params, prompt, prefix=False,
+                                   rows=1)
+    got, eng = _run_sequential_pair(m, params, prompt, prefix=True,
+                                    rows=1)
+    assert got == base
+    stats = eng.stats()
+    assert stats["hit_tokens"] >= 56    # full pages still shared
+    assert stats["evictions"] > 0       # the unpinned tail was reclaimed
+
+
+def test_engine_chunked_prefill_token_identical(tiny):
+    """Chunked prefill (including chunk=1) reproduces monolithic greedy
+    output and interleaves with decode (tick accounting shows overlap)."""
+    m, params = tiny
+    rng = np.random.default_rng(9)
+    prompts = [_prompt(rng, 20, 40), _prompt(rng, 3, 8)]
+
+    def run(chunk):
+        eng = Engine(m, params, max_concurrency=2, max_len=64, eos_id=-1,
+                     page_size=8, prefill_chunk=chunk)
+        for uid, p in enumerate(prompts):
+            assert eng.submit(Request(uid=uid, prompt=p.copy(),
+                                      max_new_tokens=8))
+        done = eng.run()
+        eng.kv.leak_check()
+        return ([r.tokens for r in sorted(done, key=lambda r: r.uid)],
+                eng.stats())
+
+    base, _ = run(None)
+    for chunk in (1, 7, 8):
+        got, stats = run(chunk)
+        assert got == base, f"chunk={chunk}"
+        assert stats["prefill_chunks"] >= sum(
+            -(-len(p) // chunk) for p in prompts)
+    _, stats = run(4)
+    assert stats["interleaved_ticks"] > 0, \
+        "long chunked prefill never overlapped a decode tick"
+
+
 def test_determinism_artifact_vs_in_memory_engine(tiny, tmp_path):
     """Greedy decode through an ``.hnart`` cold start is token-identical
     to the in-memory engine under the continuous-batching scheduler."""

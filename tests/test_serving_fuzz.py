@@ -1,0 +1,313 @@
+"""Differential serving fuzz: the prefix-sharing paged engine must be
+observationally identical to the engine it replaced.
+
+Harness 1 (differential): random workloads — prompt lengths including
+shared / divergent / duplicated prefixes, priorities, max_new_tokens,
+pool sizes down to oversubscription, chunked and monolithic prefill —
+run through the engine with ``prefix_cache`` on vs off vs
+``generate_batch``.  Greedy outputs must be token-identical in all
+three, and ``leak_check`` (including refcounts) must pass after every
+run with zero pages left beyond what the prefix tree retains.
+
+Harness 2 (stateful): a hypothesis ``RuleBasedStateMachine`` (falling
+back to the conftest stub's deterministic random-walk mode when the real
+package is absent) over raw ``PageAllocator`` + ``PagedKVCache``
+refcount ops: alloc / share / COW / release / publish / pressure
+sequences never double-free, never write to a page with refcount > 1,
+and ``leak_check`` holds at every step.
+
+Example counts scale with ``FUZZ_EXAMPLES`` / ``FUZZ_EXAMPLES_SLOW``
+(CI runs the fast tier bounded, the slow tier with the full sweep).
+"""
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.stateful import (RuleBasedStateMachine, invariant, rule)
+
+import jax  # noqa: E402
+
+from repro.configs.base import ArchConfig
+from repro.models import build
+from repro.serving.engine import Engine, Request, generate_batch
+from repro.serving.paged_cache import PagedKVCache
+from repro.serving.scheduler import SchedulerConfig
+
+FAST_EXAMPLES = int(os.environ.get("FUZZ_EXAMPLES", "4"))
+SLOW_EXAMPLES = int(os.environ.get("FUZZ_EXAMPLES_SLOW", "20"))
+
+TINY = ArchConfig(
+    name="tiny-fuzz", family="dense", arch_kind="decoder",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, remat=False, dtype="float32")
+
+PAGE = 8
+MAX_LEN = 64
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    m = build(TINY)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# differential fuzz: prefix on == prefix off == generate_batch
+# ---------------------------------------------------------------------------
+
+def _workload(rng):
+    """Prompts with shared system prefixes, exact duplicates, and
+    divergent tails; per-request priorities; one max_new (so
+    generate_batch stays comparable)."""
+    n_req = int(rng.integers(2, 7))
+    sys_len = int(rng.integers(0, 22))
+    sys_p = rng.integers(2, TINY.vocab_size, size=sys_len).astype(np.int32)
+    max_new = int(rng.integers(1, 7))
+    prompts, prios = [], []
+    for _ in range(n_req):
+        r = rng.random()
+        if prompts and r < 0.15:        # exact duplicate: boundary reuse
+            prompts.append(prompts[int(rng.integers(len(prompts)))].copy())
+        elif sys_len and r < 0.75:      # shared prefix, divergent tail
+            tail = rng.integers(2, TINY.vocab_size,
+                                size=int(rng.integers(1, 9))).astype(
+                                    np.int32)
+            prompts.append(np.concatenate([sys_p, tail]))
+        else:                           # unrelated prompt
+            prompts.append(rng.integers(
+                2, TINY.vocab_size,
+                size=int(rng.integers(1, 25))).astype(np.int32))
+        prios.append(int(rng.integers(0, 3)))
+    return prompts, prios, max_new
+
+
+def _run(m, params, prompts, prios, max_new, *, prefix, chunk, num_pages,
+         deadline=None):
+    eng = Engine(m, params, max_concurrency=3, max_len=MAX_LEN, eos_id=-1,
+                 page_size=PAGE, num_pages=num_pages, prefix_cache=prefix,
+                 prefill_chunk=chunk,
+                 scheduler=SchedulerConfig(policy="priority", max_queue=64,
+                                           deadline_s=deadline))
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new,
+                    priority=prios[i]) for i, p in enumerate(prompts)]
+    accepted = {r.uid for r in reqs if eng.submit(r)}
+    done = eng.run()
+    # no leaked pages or refcounts: everything still held is exactly
+    # what the prefix tree retains for future hits
+    eng.kv.leak_check()
+    retained = eng.kv.prefix.num_pages if eng.kv.prefix is not None else 0
+    assert eng.kv.alloc.num_used == retained
+    assert all(r is None for r in eng.rows) and not eng._prefilling
+    return ({r.uid: list(r.tokens) for r in done}, accepted,
+            {r.uid: r.status for r in reqs}, eng)
+
+
+def _check_one(tiny, seed):
+    m, params = tiny
+    rng = np.random.default_rng(seed)
+    prompts, prios, max_new = _workload(rng)
+    # pools from comfortable down to oversubscribed (3 rows want up to
+    # ~15 pages); every prompt still individually fits (fits_ever)
+    num_pages = int(rng.integers(8, 26))
+    chunk = [None, 1, 3, PAGE][int(rng.integers(4))]
+
+    on, acc_on, _, eng = _run(m, params, prompts, prios, max_new,
+                              prefix=True, chunk=chunk,
+                              num_pages=num_pages)
+    off, acc_off, _, _ = _run(m, params, prompts, prios, max_new,
+                              prefix=False, chunk=None,
+                              num_pages=num_pages)
+    assert acc_on == acc_off == set(range(len(prompts)))
+    assert on == off, (on, off, chunk, num_pages)
+    batch = generate_batch(m, params, prompts, max_new_tokens=max_new,
+                           max_len=MAX_LEN, slots=3, eos_id=-1,
+                           page_size=PAGE, num_pages=num_pages)
+    assert batch == [on[uid] for uid in sorted(on)]
+    return eng
+
+
+@settings(max_examples=FAST_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_fuzz_prefix_on_off_batch_token_identical(tiny, seed):
+    _check_one(tiny, seed)
+
+
+@pytest.mark.slow
+@settings(max_examples=SLOW_EXAMPLES, deadline=None)
+@given(seed=st.integers(10 ** 6, 2 * 10 ** 6))
+def test_fuzz_full_sweep(tiny, seed):
+    """Full sweep: same property, fresh seed range, and every chunk
+    size against the same workload."""
+    m, params = tiny
+    rng = np.random.default_rng(seed)
+    prompts, prios, max_new = _workload(rng)
+    num_pages = int(rng.integers(8, 26))
+    outs = []
+    for prefix, chunk in [(False, None), (True, None), (True, 1),
+                          (True, 3), (True, PAGE), (True, 3 * PAGE)]:
+        toks, acc, _, _ = _run(m, params, prompts, prios, max_new,
+                               prefix=prefix, chunk=chunk,
+                               num_pages=num_pages)
+        outs.append(toks)
+        assert acc == set(range(len(prompts)))
+    assert all(o == outs[0] for o in outs[1:])
+
+
+@settings(max_examples=max(FAST_EXAMPLES // 2, 2), deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_fuzz_deadlines_terminal_and_leak_free(tiny, seed):
+    """With queue deadlines expiry is wall-clock (not comparable token
+    for token) — but every request must still reach a terminal state
+    and the pool must stay leak-free."""
+    m, params = tiny
+    rng = np.random.default_rng(seed)
+    prompts, prios, max_new = _workload(rng)
+    _, accepted, status, eng = _run(
+        m, params, prompts, prios, max_new, prefix=True,
+        chunk=[None, 3][int(rng.integers(2))],
+        num_pages=int(rng.integers(8, 26)), deadline=0.0)
+    for uid, stat in status.items():
+        assert stat in ("done", "expired", "rejected"), (uid, stat)
+    assert eng.stats()["done"] + eng.stats()["failed"] == len(prompts)
+
+
+def test_fuzz_preemption_mid_chunked_prefill(tiny):
+    """A pool sized so the youngest row — a long prompt mid-chunked-
+    prefill — gets preempted: tokens still match the fully-provisioned
+    run, the preemption counter sees the queued victim (it is neither
+    done nor failed nor in a row when stats are read mid-run), the
+    landed chunks are published so the resume hits the prefix tree, and
+    nothing leaks."""
+    m, params = tiny
+    rng = np.random.default_rng(11)
+    short = [rng.integers(2, TINY.vocab_size, size=6).astype(np.int32)
+             for _ in range(2)]
+    long_p = rng.integers(2, TINY.vocab_size, size=40).astype(np.int32)
+    prompts = short + [long_p]          # long admitted last => youngest
+    prios = [0] * len(prompts)
+
+    # max_new keeps the shorts decoding (and growing pages) for the
+    # whole 10-chunk prefill of the long prompt; 9 usable pages let the
+    # long admit early, then run dry on the shorts' growth => the
+    # youngest row (the long, mid-prefill) is preempted
+    full, _, _, _ = _run(m, params, prompts, prios, 16, prefix=True,
+                         chunk=4, num_pages=None)
+    tight, _, _, eng = _run(m, params, prompts, prios, 16, prefix=True,
+                            chunk=4, num_pages=10)
+    assert tight == full
+    stats = eng.stats()
+    assert stats["preemptions"] == eng._n_preempt > 0, \
+        "pool sizing did not force a preemption"
+    assert stats["requeued"] >= stats["preemptions"]
+    # the long prompt shares nothing with the shorts, so any prefix hit
+    # can only come from its own chunks published at preemption
+    assert stats["hit_tokens"] > 0, \
+        "mid-prefill preemption did not publish landed pages"
+    assert stats["prefill_chunks"] > len(long_p) // 4
+
+
+# ---------------------------------------------------------------------------
+# stateful refcount machine: alloc / share / COW / release / publish
+# ---------------------------------------------------------------------------
+
+class PagedRefcountMachine(RuleBasedStateMachine):
+    """Random walks over the raw cache bookkeeping.  The engine is not
+    involved: rules poke admit/share, decode growth (with the COW
+    guard), publishing rows to the prefix tree, releases, and allocator
+    pressure (LRU reclaim) directly, asserting the write-privacy
+    invariant and full refcount accounting after every step."""
+
+    PS, ROWS, MAXP, PAGES = 4, 4, 5, 18
+
+    def __init__(self):
+        super().__init__()
+        self.kv = PagedKVCache(self.PAGES, self.PS, self.ROWS, self.MAXP,
+                               prefix_cache=True)
+        self.toks = {}
+
+    def _publish(self, row):
+        n = int(self.kv.lengths[row])
+        self.kv.index_row(row, np.asarray(self.toks[row][:n], np.int32), n)
+
+    @rule(row=st.integers(0, 3), tlen=st.integers(1, 18),
+          pat=st.integers(0, 2), stride=st.integers(1, 2))
+    def admit(self, row, tlen, pat, stride):
+        if row in self.kv.row_pages:
+            return
+        # tiny alphabet + patterned ids: prefix collisions are the norm
+        ids = [(pat + i * stride) % 4 for i in range(tlen)]
+        if self.kv.admit_row(row, tlen, token_ids=np.asarray(ids,
+                                                             np.int32)):
+            # the engine gathers and unpins in the same tick; mirror it
+            self.kv.drop_tail_ref(row)
+            self.toks[row] = ids
+
+    @rule(row=st.integers(0, 3), tok=st.integers(0, 3))
+    def decode_grow(self, row, tok):
+        if row not in self.kv.row_pages:
+            return
+        status = self.kv.ensure_decode_room(row)
+        assert status in ("ok", "oom", "full")
+        if status != "ok":
+            return
+        # THE invariant: the slot about to be written is private —
+        # ensure_decode_room must have COW'd any shared target
+        j = int(self.kv.lengths[row]) // self.PS
+        page = self.kv.row_pages[row][j]
+        assert self.kv.alloc.refcount(page) == 1, \
+            f"write target page {page} has refcount > 1"
+        self.kv.pending_copies.clear()      # host-only: copies are virtual
+        self.kv.advance(row)
+        self.toks[row].append(tok)
+
+    @rule(row=st.integers(0, 3))
+    def publish(self, row):
+        if row in self.kv.row_pages:
+            self._publish(row)
+
+    @rule(row=st.integers(0, 3), pub=st.booleans())
+    def release(self, row, pub):
+        if row not in self.kv.row_pages:
+            return
+        if pub:                         # finish/preempt publish-then-free
+            self._publish(row)
+        self.kv.release_row(row)
+        del self.toks[row]
+
+    @rule(need=st.integers(1, 6))
+    def pressure(self, need):
+        """Allocator pressure: reclaim LRU tree pages; whatever is
+        granted is handed straight back."""
+        got = self.kv._alloc_or_evict(need)
+        if got is not None:
+            self.kv.alloc.free(got)
+
+    @invariant()
+    def no_leaks(self):
+        self.kv.leak_check()
+
+
+TestPagedRefcountMachine = PagedRefcountMachine.TestCase
+try:  # real hypothesis: bound the search; the stub ignores the attribute
+    TestPagedRefcountMachine.settings = settings(max_examples=15,
+                                                 deadline=None)
+except Exception:  # pragma: no cover
+    pass
+
+
+def test_allocator_refcount_misuse_raises():
+    """Double-free / foreign-free / unallocated-incref all raise."""
+    from repro.serving.paged_cache import PageAllocator
+    alloc = PageAllocator(6)
+    (page,) = alloc.alloc(1)
+    alloc.incref(page)
+    assert alloc.refcount(page) == 2
+    assert not alloc.decref(page)
+    assert alloc.decref(page)           # freed on the last holder
+    with pytest.raises(ValueError):
+        alloc.decref(page)              # double free
+    with pytest.raises(ValueError):
+        alloc.incref(page)              # incref on a free page
+    with pytest.raises(ValueError):
+        alloc.free([0])                 # trash page was never allocated
