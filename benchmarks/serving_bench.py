@@ -19,6 +19,12 @@ request set runs with ``prefix_cache`` on vs off (both with chunked
 prefill) and reports prefix-hit rate, pages saved, mean/p50 TTFT, and
 tok/s, plus a token-identity cross-check between the two arms.
 
+A third section benches the **mixed-sampling workload**: greedy,
+seeded top-p, and stop-sequence rows share one decode batch (the fused
+sampler's one-dispatch-per-tick contract), reporting tok/s, per-tick
+sampler overhead, and the finish-reason split — plus a determinism
+cross-check (a rerun with the same seeds must reproduce every token).
+
     PYTHONPATH=src python -m benchmarks.serving_bench [--smoke]
 """
 from __future__ import annotations
@@ -34,6 +40,7 @@ import numpy as np
 import repro.configs as C
 from repro.configs.reduced import reduced
 from repro.models import build
+from repro.serving.api import SamplingParams
 from repro.serving.engine import Engine, Request
 from repro.serving.scheduler import SchedulerConfig
 
@@ -73,7 +80,7 @@ def bench_level(model, params, cfg, *, concurrency: int, requests: int,
     schedule = _requests(requests, cfg.vocab_size, max_new, gap)
     t0 = time.time()
     pending = list(schedule)
-    while pending or len(eng.sched) or any(r is not None for r in eng.rows):
+    while pending or eng.pending():
         now = time.time() - t0
         while pending and pending[0][0] <= now:
             eng.submit(pending.pop(0)[1])
@@ -90,10 +97,16 @@ def bench_level(model, params, cfg, *, concurrency: int, requests: int,
                 "prefill_ticks", "decode_ticks", "interleaved_ticks",
                 "preemptions", "failed", "pages_fresh", "pages_shared",
                 "cow_copies", "hit_tokens", "miss_tokens",
-                "indexed_pages", "evictions")
+                "indexed_pages", "evictions", "ticks")
     for k in counters:
         if k in stats:
             stats[k] -= warm.get(k, 0)
+    # nested counter dicts + cumulative sampler time: same delta rule
+    for k in ("sampler_dispatches", "finish_reasons"):
+        stats[k] = {kk: vv - warm.get(k, {}).get(kk, 0)
+                    for kk, vv in stats[k].items()}
+    stats["sampler_time_s"] = round(
+        stats["sampler_time_s"] - warm.get("sampler_time_s", 0.0), 6)
     out = {"concurrency": concurrency, "requests": requests,
            "tokens": total_tokens,
            "wall_s": round(wall, 3),
@@ -184,6 +197,94 @@ def bench_shared_prefix(model, params, cfg, *, concurrency: int,
     return row
 
 
+def bench_mixed_sampling(model, params, cfg, *, concurrency: int,
+                         requests: int, max_new: int, max_len: int,
+                         page_size: int) -> dict:
+    """Greedy + seeded top-p + stop-sequence rows in ONE decode batch.
+
+    Measures the fused sampler's overhead (one dispatch per decode tick
+    however the batch mixes SamplingParams) and cross-checks seeded
+    determinism: a second run with identical seeds must reproduce every
+    token.
+    """
+    rng = np.random.default_rng(2)
+    reqs_spec = []
+    for uid in range(requests):
+        plen = int(rng.integers(4, 20))
+        prompt = rng.integers(2, cfg.vocab_size,
+                              size=plen).astype(np.int32)
+        kind = ("greedy", "top_p", "stop")[uid % 3]
+        if kind == "greedy":
+            sp = SamplingParams(max_tokens=max_new)
+        elif kind == "top_p":
+            sp = SamplingParams(temperature=0.8, top_p=0.9, top_k=64,
+                                max_tokens=max_new, seed=1000 + uid)
+        else:   # sampled with a 1-token stop sequence (may trigger)
+            sp = SamplingParams(temperature=1.0, top_p=0.95,
+                                max_tokens=max_new, seed=1000 + uid,
+                                stop=((int(rng.integers(
+                                    2, cfg.vocab_size)),),))
+        reqs_spec.append((prompt, sp, kind))
+
+    def run():
+        eng = Engine(model, params, max_concurrency=concurrency,
+                     max_len=max_len, eos_id=-1, page_size=page_size,
+                     scheduler=SchedulerConfig(max_queue=requests + 2))
+        # warmup: compile prefill buckets + decode + the sampler
+        # variants the workload will hit (all-greedy ticks dispatch the
+        # with_sampling=False specialization, mixed ticks the full one)
+        eng.submit(Request(uid=-1, prompt=np.arange(6, dtype=np.int32) + 2,
+                           sampling=SamplingParams(temperature=0.7,
+                                                   top_p=0.9, top_k=64,
+                                                   max_tokens=2,
+                                                   seed=0)))
+        eng.submit(Request(uid=-2, prompt=np.arange(5, dtype=np.int32) + 2,
+                           sampling=SamplingParams(max_tokens=2)))
+        eng.run()
+        eng.submit(Request(uid=-3, prompt=np.arange(7, dtype=np.int32) + 2,
+                           sampling=SamplingParams(max_tokens=2)))
+        eng.run()                  # an all-greedy batch, alone
+        eng._done.clear()
+        warm = eng.stats()         # counter baseline: report deltas
+        t0 = time.time()
+        for uid, (prompt, sp, _) in enumerate(reqs_spec):
+            eng.submit(Request(uid=uid, prompt=prompt.copy(),
+                               sampling=sp))
+        done = eng.run()
+        wall = time.time() - t0
+        stats = eng.stats()
+        ticks = stats["ticks"] - warm["ticks"]
+        sampler_s = stats["sampler_time_s"] - warm["sampler_time_s"]
+        disp = {k: v - warm["sampler_dispatches"][k]
+                for k, v in stats["sampler_dispatches"].items()}
+        toks = {r.uid: list(r.tokens) for r in done}
+        return {"tok_per_s": round(stats["tokens"] / wall, 2),
+                "wall_s": round(wall, 3),
+                "ticks": ticks,
+                "sampler_time_s": round(sampler_s, 4),
+                "sampler_ms_per_tick": round(1e3 * sampler_s
+                                             / max(ticks, 1), 3),
+                "sampler_frac": round(sampler_s / wall, 4),
+                "sampler_dispatches": disp,
+                "finish_reasons": {k: v - warm["finish_reasons"][k]
+                                   for k, v in
+                                   stats["finish_reasons"].items()}}, toks
+
+    a, toks_a = run()
+    _, toks_b = run()
+    row = {"concurrency": concurrency, "requests": requests,
+           "max_new": max_new,
+           "mix": [k for _, _, k in reqs_spec],
+           "deterministic_rerun": toks_a == toks_b}
+    row.update(a)
+    print(f"mixed-sampling @ c={concurrency}: {a['tok_per_s']} tok/s, "
+          f"sampler {a['sampler_ms_per_tick']}ms/tick "
+          f"({100 * a['sampler_frac']:.1f}% of wall), finish "
+          f"{a['finish_reasons']}, rerun-identical="
+          f"{row['deterministic_rerun']}")
+    return row
+
+
 def main(smoke: bool = False, out_json: str = "BENCH_serving.json") -> dict:
     levels = (1, 2, 4) if smoke else (1, 4, 8)
     requests = 6 if smoke else 24
@@ -216,6 +317,12 @@ def main(smoke: bool = False, out_json: str = "BENCH_serving.json") -> dict:
         sys_len=48 if smoke else 64, tail_len=8,
         max_new=4 if smoke else 16, max_len=128, page_size=16,
         prefill_chunk=32)
+    # mixed-sampling workload (fused sampler: greedy + top-p + stop
+    # rows share one batch, one dispatch per tick)
+    results["mixed_sampling"] = bench_mixed_sampling(
+        model, params, cfg, concurrency=4,
+        requests=6 if smoke else 18,
+        max_new=6 if smoke else 20, max_len=128, page_size=16)
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2)
     print(f"wrote {os.path.abspath(out_json)}")

@@ -1,0 +1,87 @@
+"""Streaming client: consume incremental `RequestOutput` deltas from
+`Engine.submit` handles.
+
+Two consumption styles over one engine:
+
+1. **Blocking iteration** — ``for delta in handle:`` drives engine
+   ticks on demand until the request finishes (simplest for one
+   request at a time).
+2. **Poll-style multiplexing** — one ``eng.step()`` loop, draining
+   every live handle's buffered deltas per tick (how a server
+   multiplexes many concurrent streams).
+
+Each request carries its own SamplingParams (greedy, seeded top-p,
+stop-sequence) and the seeded requests are reproducible token-for-token
+across reruns — the per-request counter-based PRNG streams survive
+preemption and prefix caching bitwise.
+
+    PYTHONPATH=src python examples/streaming_client.py
+"""
+import argparse
+
+import jax
+import numpy as np
+
+import repro.configs as C
+from repro.configs.reduced import reduced
+from repro.models import build
+from repro.serving import Engine, Request, SamplingParams
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--arch", default="qwen3-1.7b")
+parser.add_argument("--hashed", action="store_true")
+args = parser.parse_args()
+
+cfg = reduced(C.get(args.arch))
+if args.hashed:
+    cfg = cfg.hashed_variant(1 / 8)
+model = build(cfg)
+params = model.init(jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+
+eng = Engine(model, params, max_concurrency=2, max_len=128, eos_id=-1,
+             prefix_cache=True, prefill_chunk=16)
+
+# -- style 1: blocking iteration over one handle ---------------------------
+prompt = rng.integers(2, cfg.vocab_size, 12).astype(np.int32)
+handle = eng.submit(Request(
+    uid=0, prompt=prompt,
+    sampling=SamplingParams(temperature=0.8, top_p=0.9, seed=42,
+                            max_tokens=8, logprobs=2)))
+assert handle, "rejected?"
+print("== blocking iteration (seeded top-p, top-2 logprobs) ==")
+for delta in handle:
+    pairs = "" if not delta.new_topk else \
+        "  top2=" + str([[(t, round(lp, 2)) for t, lp in step]
+                         for step in delta.new_topk])
+    print(f"  += {delta.new_token_ids}{pairs}"
+          + (f"  [{delta.finish_reason}]" if delta.done else ""))
+print(f"  total logprob {handle.req.cumulative_logprob:.3f}")
+
+# -- style 2: poll-style multiplexing --------------------------------------
+# learn greedy's opening tokens so a stop-sequence provably triggers
+probe = eng.submit(Request(uid=99, prompt=prompt.copy(),
+                           sampling=SamplingParams(max_tokens=2)))
+list(probe)                      # drive to completion
+stop_seq = tuple(probe.req.tokens)
+
+print("== multiplexed streams (greedy / seeded / stop-sequence) ==")
+specs = [
+    ("greedy", SamplingParams(max_tokens=6)),
+    ("seeded", SamplingParams(temperature=1.0, top_k=50, seed=7,
+                              max_tokens=6)),
+    # greedy rerun with its own opening as the stop: ends early, "stop"
+    ("stop", SamplingParams(max_tokens=6, stop=(stop_seq,))),
+]
+handles = []
+for uid, (tag, sp) in enumerate(specs, start=1):
+    h = eng.submit(Request(uid=uid, prompt=prompt.copy(), sampling=sp))
+    assert h
+    handles.append((tag, h))
+while eng.pending():
+    eng.step()
+    for tag, h in handles:
+        for d in h.drain():
+            print(f"  {tag:6s} += {d.new_token_ids}"
+                  + (f"  [{d.finish_reason}]" if d.done else ""))
+print("finish reasons:", eng.stats()["finish_reasons"])

@@ -1,14 +1,16 @@
-"""Pure-jnp oracles for the hashed decompress-GEMM and paged-attention
-kernels.
+"""Pure-jnp/numpy oracles for the hashed decompress-GEMM,
+paged-attention, and sampling-filter kernels.
 
 Each function materializes the implicit operand explicitly (the virtual
-matrix for hashed GEMMs, the gathered K/V for paged attention) and uses
-plain jnp ops — the ground truth every Pallas kernel is swept against.
+matrix for hashed GEMMs, the gathered K/V for paged attention, the full
+sort for the radix top-k select) and uses plain jnp/np ops — the ground
+truth every Pallas kernel is swept against.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import hashed
 
@@ -122,3 +124,71 @@ def paged_attention_shared_ref(q, pages_k, pages_v, page_table, lengths,
         outs.append(paged_attention_ref(
             q[i:i + 1], priv_k, priv_v, ident, lengths[i:i + 1], window))
     return jnp.concatenate(outs, axis=0)
+
+
+def topk_mask_ref(logits, k, fill=-1e30):
+    """Oracle for kernels.topk.topk_mask: per-row k-th-largest threshold
+    by an explicit numpy sort (independent of both the radix kernel and
+    the lax.top_k fallback).  ``k[b] <= 0`` or ``>= V`` disables the
+    row; boundary ties all survive (value-threshold semantics).
+    Threshold comparisons happen on the fp32 view; survivors pass
+    through in the input dtype."""
+    x32 = np.asarray(jnp.asarray(logits).astype(jnp.float32))
+    out = np.array(np.asarray(jnp.asarray(logits)), copy=True)
+    k = np.asarray(k, np.int64)
+    b, v = x32.shape
+    fill = np.asarray(jnp.asarray(fill, jnp.asarray(logits).dtype))
+    for i in range(b):
+        kk = int(k[i])
+        if kk <= 0 or kk >= v:
+            continue
+        thr = np.sort(x32[i])[v - kk]          # k-th largest
+        out[i] = np.where(x32[i] >= thr, out[i], fill)
+    return jnp.asarray(out)
+
+
+def topp_mask_ref(z, p, fill=-1e30):
+    """Oracle for serving.sampling.topp_mask (nucleus filtering): numpy
+    per-row descending walk.  A token survives iff its probability is
+    >= that of the least-probable member of the smallest prefix of the
+    descending-prob order whose mass reaches p (the prefix-mass rule
+    ``cum - prob < p``, which always keeps the top-1 token); ``p >= 1``
+    disables the row."""
+    z32 = np.asarray(jnp.asarray(z).astype(jnp.float32))
+    p = np.asarray(p, np.float64)
+    out = np.array(z32, copy=True)
+    for i in range(z32.shape[0]):
+        if p[i] >= 1.0:
+            continue
+        row = z32[i]
+        e = np.exp((row - row.max()).astype(np.float32))
+        probs = (e / e.sum(dtype=np.float32)).astype(np.float32)
+        order = np.argsort(-probs, kind="stable")
+        cum = np.float32(0.0)
+        cutoff = probs[order[0]]
+        for j in order:
+            if cum < np.float32(p[i]):         # prefix mass so far < p: keep
+                cutoff = probs[j]
+                cum = np.float32(cum + probs[j])
+            else:
+                break
+        out[i] = np.where(probs >= cutoff, row, np.float32(fill))
+    return jnp.asarray(out, jnp.asarray(z).dtype)
+
+
+def minp_mask_ref(z, min_p, fill=-1e30):
+    """Oracle for serving.sampling.minp_mask: tokens whose probability
+    falls below ``min_p * max_prob`` are filtered; ``min_p <= 0``
+    disables the row."""
+    z32 = np.asarray(jnp.asarray(z).astype(jnp.float32))
+    min_p = np.asarray(min_p, np.float32)
+    out = np.array(z32, copy=True)
+    for i in range(z32.shape[0]):
+        if min_p[i] <= 0.0:
+            continue
+        row = z32[i]
+        e = np.exp((row - row.max()).astype(np.float32))
+        probs = (e / e.sum(dtype=np.float32)).astype(np.float32)
+        keep = probs >= min_p[i] * probs.max()
+        out[i] = np.where(keep, row, np.float32(fill))
+    return jnp.asarray(out, jnp.asarray(z).dtype)

@@ -2,7 +2,13 @@
 engine (repro.serving.engine).
 
     python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-        --requests 8 --max-new 16
+        --requests 8 --max-new 16 \
+        --temperature 0.8 --top-p 0.9 --seed 0 --stream
+
+Sampling flags (--temperature/--top-k/--top-p/--min-p/--seed/--stop/
+--logprobs) build one SamplingParams per request; --stream prints
+RequestOutput deltas as tokens land.  With --seed, a rerun reproduces
+every token (counter-based per-request PRNG streams).
 
 Three cold-start sources, in priority order:
 
@@ -30,6 +36,7 @@ import repro.configs as C
 from repro import policy
 from repro.configs.reduced import reduced as reduce_cfg
 from repro.models import build
+from repro.serving.api import SamplingParams
 from repro.serving.engine import Engine, Request
 from repro.train import checkpoint as ckpt_lib
 
@@ -80,7 +87,32 @@ def main() -> int:
                         "prefill; paged decoders only)")
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--max-len", type=int, default=256)
-    p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--temperature", type=float, default=0.0,
+                   help="0 = greedy; > 0 samples through the fused "
+                        "top-k/top-p/min-p pipeline")
+    p.add_argument("--top-k", type=int, default=0,
+                   help="keep only the k highest logits (0 disables)")
+    p.add_argument("--top-p", type=float, default=1.0,
+                   help="nucleus sampling mass (1.0 disables)")
+    p.add_argument("--min-p", type=float, default=0.0,
+                   help="drop tokens below min-p * max-prob (0 disables)")
+    p.add_argument("--seed", type=int, default=None,
+                   help="base sampling seed; request uid offsets it, so "
+                        "a rerun reproduces every token (counter-based "
+                        "PRNG: also bitwise across preemption and "
+                        "prefix caching)")
+    p.add_argument("--stop", action="append", default=None,
+                   metavar="IDS",
+                   help="comma-separated token ids forming a stop "
+                        "sequence (repeatable); generation finishes "
+                        "with reason 'stop' when the output ends with "
+                        "any of them")
+    p.add_argument("--logprobs", type=int, default=None,
+                   help="report top-K (id, logprob) pairs per generated "
+                        "token (0 = chosen token's logprob only)")
+    p.add_argument("--stream", action="store_true",
+                   help="print RequestOutput deltas as tokens land "
+                        "instead of whole generations at the end")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--artifact", default=None,
                    help="serve from a compressed model artifact file")
@@ -101,6 +133,9 @@ def main() -> int:
         page_size=args.page_size, num_pages=args.num_pages,
         attn_impl=args.attn_impl, prefix_cache=args.prefix_cache,
         prefill_chunk=args.prefill_chunk,
+        # raise the engine's logprob cap when the CLI asks for more
+        # than the default report width
+        max_logprobs=max(8, args.logprobs or 0),
         scheduler=SchedulerConfig(policy=args.scheduler,
                                   max_queue=args.queue_limit,
                                   deadline_s=args.deadline))
@@ -162,8 +197,20 @@ def main() -> int:
             print(f"loaded params from {args.ckpt_dir}")
         eng = Engine(model, params, **engine_kwargs)
 
+    stop = tuple(tuple(int(t) for t in s.split(","))
+                 for s in (args.stop or ()))
+
+    def params_for(uid: int) -> SamplingParams:
+        return SamplingParams(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p, min_p=args.min_p, stop=stop,
+            max_tokens=args.max_new,
+            seed=None if args.seed is None else args.seed + uid,
+            logprobs=args.logprobs)
+
     rng = np.random.default_rng(0)
     t0 = time.time()
+    handles = []
     for uid in range(args.requests):
         plen = int(rng.integers(4, 24))
         prompt = rng.integers(2, cfg.vocab_size, size=plen).astype(np.int32)
@@ -174,22 +221,42 @@ def main() -> int:
         if cfg.num_image_tokens:
             extras = {"image_embeds": rng.standard_normal(
                 (1, cfg.num_image_tokens, cfg.d_model)).astype(np.float32)}
-        ok = eng.submit(Request(uid=uid, prompt=prompt,
-                                max_new_tokens=args.max_new,
-                                temperature=args.temperature,
-                                extras=extras))
-        if not ok:
+        h = eng.submit(Request(uid=uid, prompt=prompt, extras=extras,
+                               sampling=params_for(uid)))
+        if not h:
             print(f"req {uid}: REFUSED (queue full or request can never "
                   f"fit the page pool — see --queue-limit/--num-pages)")
-    done = eng.run()
+        else:
+            handles.append(h)
+    if args.stream:
+        # poll-style multiplexing: one engine loop, drain every handle's
+        # available deltas per tick
+        while eng.pending():
+            eng.step()
+            for h in handles:
+                for d in h.drain():
+                    lp = "" if not d.new_logprobs else \
+                        f"  lp={['%.3f' % v for v in d.new_logprobs]}"
+                    fin = f"  [{d.finish_reason}]" if d.done else ""
+                    print(f"req {d.uid} += {d.new_token_ids}{lp}{fin}")
+        done = [h.req for h in handles if h.req.done]
+    else:
+        done = eng.run()
     dt = time.time() - t0
     total_tokens = sum(len(r.tokens) for r in done)
     for r in sorted(done, key=lambda r: r.uid):
-        print(f"req {r.uid}: {r.tokens}")
+        print(f"req {r.uid}: {r.tokens}  "
+              f"(finish={r.finish_reason}, seed={r.seed_used}, "
+              f"logprob={r.cumulative_logprob:.3f})")
+    stats = eng.stats()
+    print(f"finish reasons: {stats['finish_reasons']}  "
+          f"sampler dispatches: {stats['sampler_dispatches']} "
+          f"({stats['sampler_time_s']:.3f}s in sampler over "
+          f"{stats['ticks']} ticks)")
     summary = {"requests": len(done), "tokens": total_tokens,
                "wall_s": round(dt, 2),
                "tok_per_s": round(total_tokens / dt, 1)}
-    summary.update(eng.stats())
+    summary.update(stats)
     print(json.dumps(summary))
     return 0
 

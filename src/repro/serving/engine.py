@@ -11,9 +11,9 @@ Design (vLLM-style, adapted to XLA's static-shape world):
   (`kernels/paged_attention`, ref fallback in `kernels/ref`).  When the
   pool is oversubscribed and a row needs a page none are free, the
   youngest active row is preempted — its pages are released and it
-  re-enters the queue head to be re-prefilled later (greedy decode is
-  reproducible across preemption; sampled decode draws fresh
-  randomness).
+  re-enters the queue head to be re-prefilled later (decode is
+  reproducible across preemption — greedy trivially, sampled via the
+  counter-based per-request PRNG streams below).
 - **Prefix caching** (``prefix_cache=True``): a radix tree over token-id
   page chunks dedups shared prompt prefixes — a new request whose feed
   starts with an indexed prefix maps those pages by reference instead of
@@ -41,21 +41,34 @@ Design (vLLM-style, adapted to XLA's static-shape world):
   head-of-line blocking on long generations.
 
 Prefill is bucketed pad-and-mask (one compile per bucket) for pure
-decoders; sampling is greedy or temperature, fp32 logits.  All jitted
-functions are cache-functional (cache in, cache out) so the same engine
-code runs under pjit on a mesh.
+decoders.  **Sampling** is one fused jitted dispatch per decode tick
+(`repro.serving.sampling`): every `SamplingParams` knob rides as a
+per-row array — penalties, temperature, top-k (Pallas radix-select
+kernel on TPU), top-p, min-p, and a counter-based PRNG keyed on
+``(seed, generated-token index)`` — so mixed greedy/sampled batches
+never branch per request in the hot loop, and seeded decoding is
+bitwise reproducible across preemption-recompute, prefix-cache replay,
+and chunked prefill.  ``Engine.submit`` returns a `RequestHandle`
+(truthy iff accepted) that streams incremental `RequestOutput` deltas
+(`repro.serving.api`).  All jitted functions are cache-functional
+(cache in, cache out) so the same engine code runs under pjit on a
+mesh.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
+from repro.serving import sampling as sampling_lib
+from repro.serving.api import (FINISH_DEADLINE, FINISH_LENGTH, FINISH_STOP,
+                               FINISH_REASONS, RequestHandle, SamplingParams)
 from repro.serving.paged_cache import TRASH_PAGE, PagedKVCache
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
@@ -64,9 +77,10 @@ from repro.serving.scheduler import Scheduler, SchedulerConfig
 class Request:
     uid: int
     prompt: np.ndarray                  # (P,) int32
-    max_new_tokens: int = 32
-    temperature: float = 0.0            # 0 => greedy
+    max_new_tokens: int = 32            # legacy mirror of sampling.max_tokens
+    temperature: float = 0.0            # legacy mirror of sampling.temperature
     priority: int = 0                   # lower = more urgent
+    sampling: Optional[SamplingParams] = None
     # filled by the engine
     tokens: Optional[List[int]] = None
     done: bool = False
@@ -78,6 +92,29 @@ class Request:
     finish_time: Optional[float] = None
     preemptions: int = 0
     truncated: bool = False             # force-retired at max_len
+    finish_reason: Optional[str] = None       # stop / length / deadline
+    token_logprobs: Optional[List[float]] = None   # chosen-token logprobs
+    cumulative_logprob: float = 0.0
+    topk_logprobs: Optional[List[List[Tuple[int, float]]]] = None
+    seed_used: Optional[int] = None     # effective PRNG seed (engine-drawn
+    #                                     when sampling.seed is None)
+
+    def __post_init__(self):
+        # Compat shim: the legacy flat knobs and the SamplingParams
+        # surface stay coherent both ways.  A legacy
+        # ``Request(temperature=t, max_new_tokens=n)`` lowers into an
+        # equivalent SamplingParams; an explicit ``sampling=`` wins and
+        # back-fills the mirrors so old readers keep working.
+        if self.sampling is None:
+            self.sampling = SamplingParams(temperature=self.temperature,
+                                           max_tokens=self.max_new_tokens)
+        else:
+            self.temperature = self.sampling.temperature
+            self.max_new_tokens = self.sampling.max_tokens
+        if self.token_logprobs is None:
+            self.token_logprobs = []
+        if self.sampling.logprobs is not None and self.topk_logprobs is None:
+            self.topk_logprobs = []
 
 
 @dataclasses.dataclass
@@ -188,7 +225,8 @@ class Engine:
                  scheduler: Optional[SchedulerConfig] = None,
                  attn_impl: str = "ref", paged: Optional[bool] = None,
                  prefix_cache: bool = False,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 max_logprobs: int = 8):
         """max_concurrency (alias: slots) fixes the decode batch width.
 
         Paged knobs (decoder kinds): ``page_size`` tokens per KV page;
@@ -201,6 +239,13 @@ class Engine:
         (radix tree + refcounts + COW); ``prefill_chunk`` prefills long
         prompts N tokens per tick interleaved with decode (None =
         monolithic).  Both require the paged backend.
+
+        ``max_logprobs`` caps the per-token top-K logprob report any
+        request may ask for (the fused sampler computes top-K once per
+        tick at this fixed width); ``seed`` seeds the stream that
+        assigns per-request sampling seeds to requests that did not
+        pin one — for a fixed submit order the whole run is
+        reproducible.
         """
         self.model = model
         self.params = params
@@ -223,13 +268,43 @@ class Engine:
         self.rows: List[Optional[Request]] = [None] * rows
         self._row_seq = [0] * rows      # admission order, for preemption
         self._seq = 0
-        self._key = jax.random.PRNGKey(seed)
         self._done: List[Request] = []
         self._failed: List[Request] = []
         self._tokens = np.zeros((rows, 1), np.int32)
         self._prefill = jax.jit(model.prefill)
         self._prefilling: Dict[int, _Prefill] = {}
         self._n_preempt = 0
+        # fused sampler: per-row SamplingParams state + ONE jitted
+        # dispatch per decode tick (a second B=1 specialization serves
+        # prefill completions)
+        vocab = model.cfg.vocab_size
+        self._logprob_k = int(min(max_logprobs, vocab))
+        self._sampler_state = sampling_lib.SamplerState(rows, vocab)
+        # specializations keyed by (logprob width, any-sampled-row,
+        # any-truncated-row): the engine dispatches the k=0 variant
+        # (no per-tick top-K) unless some bound row asked for logprobs,
+        # the with_sampling=False variant (argmax only — no Gumbel
+        # field) when every bound row is greedy, the
+        # with_truncation=False variant (no top-k/top-p/min-p sorts)
+        # for temperature-only batches, and omits the penalty masks
+        # from the input dict (statically, by key) when no bound row
+        # uses penalties — sparing the (rows, vocab) host->device
+        # transfer on default traffic.  A bounded menu of compiled
+        # variants, all bitwise token-identical (greedy rows take
+        # argmax in every variant; disabled knobs are exact no-ops).
+        # (trunc only matters when samp; the samp=False entries for
+        # trunc=True just alias the same compiled program shape)
+        self._sample_fused = {
+            (k, samp, trunc): jax.jit(functools.partial(
+                sampling_lib.sample_tokens, logprob_k=k,
+                with_sampling=samp, with_truncation=trunc))
+            for k in {0, self._logprob_k}
+            for samp in (False, True) for trunc in (False, True)}
+        self._auto_seeds = np.random.default_rng(seed)
+        self._sampler_time = 0.0
+        self._dispatch_counts = {"prefill": 0, "decode": 0}
+        self._finish_counts = {r: 0 for r in FINISH_REASONS}
+        self._n_ticks = 0
 
         if self.paged:
             # page-aligned max_len keeps every prefill page copy in
@@ -280,7 +355,10 @@ class Engine:
         dequantized at load: the model layers need real arrays (a
         keep-quantized engine path waits on an int8 decompress kernel).
         Extra kwargs (page_size, prefix_cache, prefill_chunk, scheduler,
-        ...) pass through to Engine.
+        max_logprobs, ...) pass through to Engine, so the full sampling
+        & streaming surface (SamplingParams requests, RequestHandle
+        deltas, seeded reproducibility) works identically on a
+        cold-started artifact.
         """
         from repro.artifact import io as artifact_io
         if registry_root is not None:
@@ -297,24 +375,37 @@ class Engine:
             return self.model.cfg.num_image_tokens
         return 0
 
-    def submit(self, req: Request) -> bool:
-        """Enqueue a request.  False = refused (backpressure: bounded
-        queue full, or the request could never fit the page pool)."""
+    def submit(self, req: Request) -> RequestHandle:
+        """Enqueue a request.  Returns a `RequestHandle` — truthy iff
+        accepted (falsy: backpressure on the bounded queue, or the
+        request could never fit the page pool), so ``if eng.submit(r)``
+        keeps its legacy meaning.  Iterate the handle (or ``drain()``
+        it) for streamed `RequestOutput` deltas."""
         if req.tokens is None:
             req.tokens = []
+        sp = req.sampling
+        if sp.logprobs is not None and sp.logprobs > self._logprob_k:
+            raise ValueError(
+                f"logprobs={sp.logprobs} exceeds engine "
+                f"max_logprobs={self._logprob_k}")
         if self.paged:
             total = len(req.prompt) + self._extra_tokens(req) \
-                + req.max_new_tokens
+                + sp.max_tokens
             if not self.kv.fits_ever(total):
                 req.status = "rejected"
                 self._failed.append(req)
-                return False
+                return RequestHandle(self, req, accepted=False)
         if not self.sched.submit(req, time.time()):
             req.status = "rejected"
             self._failed.append(req)
-            return False
+            return RequestHandle(self, req, accepted=False)
+        if req.seed_used is None:
+            # the effective PRNG stream seed: explicit, or drawn from
+            # the engine's seeded stream (deterministic in submit order)
+            req.seed_used = int(sp.seed) if sp.seed is not None \
+                else int(self._auto_seeds.integers(0, 2 ** 31 - 1))
         req.status = "queued"
-        return True
+        return RequestHandle(self, req, accepted=True)
 
     def _free_rows(self) -> List[int]:
         return [i for i, r in enumerate(self.rows) if r is None]
@@ -408,6 +499,10 @@ class Engine:
             req=req, feed=feed, target=target, pos=hit, cache=cache,
             chunkable=self._can_bucket(req))
         self.rows[row] = req
+        # (re)bind the row's sampling state: pure function of the
+        # request's (params, prompt, tokens), so a preempted request
+        # resumes its PRNG stream at exactly len(tokens)
+        self._sampler_state.bind(row, req)
         self._seq += 1
         self._row_seq[row] = self._seq
         req.status = "prefilling"
@@ -498,11 +593,11 @@ class Engine:
             full = (st.target // self.kv.page_size) * self.kv.page_size
             self.kv.index_row(row, ids, full)
         req.status = "running"
-        tok = self._sample(logits[:, -1], temps=[req.temperature])
-        req.tokens.append(int(tok[0]))
+        res = self._run_sampler(logits[:, -1], slice(row, row + 1),
+                                "prefill")
+        self._commit_token(row, req, res, 0)
         if req.first_token_time is None:
             req.first_token_time = time.time()
-        self._tokens[row, 0] = int(tok[0])
 
     def _prefill_into_dense(self, row: int, req: Request,
                             now: float) -> None:
@@ -531,36 +626,59 @@ class Engine:
         else:
             self.cache["index"] = c1["index"]
         self.rows[row] = req
+        self._sampler_state.bind(row, req)
         self._seq += 1
         self._row_seq[row] = self._seq
         req.status = "running"
         if req.first_admit_time is None:
             req.first_admit_time = now
-        tok = self._sample(logits[:, -1], temps=[req.temperature])
-        req.tokens.append(int(tok[0]))
+        res = self._run_sampler(logits[:, -1], slice(row, row + 1),
+                                "prefill")
+        self._commit_token(row, req, res, 0)
         if req.first_token_time is None:
             req.first_token_time = time.time()
-        self._tokens[row, 0] = int(tok[0])
 
-    def _sample(self, logits, temps: Optional[List[float]] = None
-                ) -> np.ndarray:
-        """Sample next tokens.  temps: per-row temperatures; defaults to
-        the active rows' temperatures (decode path).  Prefill passes the
-        admitted request's temperature explicitly — row state isn't
-        updated yet at that point, so deriving it from self.rows would
-        read a stale/unrelated row."""
-        logits = jnp.asarray(logits, jnp.float32)
-        if temps is None:
-            temps = [r.temperature if r else 0.0 for r in self.rows]
-        assert len(temps) >= logits.shape[0], (len(temps), logits.shape)
-        self._key, k = jax.random.split(self._key)
-        greedy = jnp.argmax(logits, -1)
-        t = jnp.asarray([max(t, 1e-6) for t in temps])[:logits.shape[0]]
-        sampled = jax.random.categorical(k, logits / t[:, None])
-        use_greedy = jnp.asarray([tt <= 0.0 for tt in temps]
-                                 )[:logits.shape[0]]
-        return np.asarray(jnp.where(use_greedy, greedy, sampled),
-                          np.int32)
+    def _run_sampler(self, logits, sl: slice, kind: str
+                     ) -> Dict[str, np.ndarray]:
+        """One fused sampler dispatch over the row slice ``sl`` of the
+        sampler state (full batch for decode ticks, the single admitted
+        row for a prefill completion).  The per-row SamplingParams
+        arrays ride into the same jitted program no matter how the
+        batch mixes greedy/sampled/penalized rows."""
+        # sync the model's (async-dispatched) logits BEFORE the clock
+        # starts, so sampler_time_s measures the sampler, not the
+        # decode forward pass it would otherwise absorb
+        logits = jax.block_until_ready(jnp.asarray(logits, jnp.float32))
+        t0 = time.perf_counter()
+        st = self._sampler_state
+        masks = bool(st.uses_penalties[sl].any())
+        k = self._logprob_k if st.wants_logprobs[sl].any() else 0
+        samp = bool(st.is_sampled[sl].any())
+        trunc = samp and bool(st.uses_truncation[sl].any())
+        out = self._sample_fused[k, samp, trunc](
+            logits, st.batch(sl, with_masks=masks))
+        res = {k2: np.asarray(v) for k2, v in out.items()}
+        self._sampler_time += time.perf_counter() - t0
+        self._dispatch_counts[kind] += 1
+        return res
+
+    def _commit_token(self, row: int, req: Request,
+                      res: Dict[str, np.ndarray], j: int) -> None:
+        """Record row ``row``'s sampled token (index ``j`` in the
+        sampler result): request output + logprobs, the sampler's PRNG
+        counter / penalty masks, and the next decode feed."""
+        tok = int(res["token"][j])
+        lp = float(res["logprob"][j])
+        req.tokens.append(tok)
+        req.token_logprobs.append(lp)
+        req.cumulative_logprob += lp
+        kk = req.sampling.logprobs
+        if kk is not None and "topk_ids" in res:
+            req.topk_logprobs.append(list(zip(
+                res["topk_ids"][j][:kk].tolist(),
+                res["topk_logprobs"][j][:kk].tolist())))
+        self._sampler_state.note(row, tok)
+        self._tokens[row, 0] = tok
 
     # ------------------------------------------------------------------
     def _history_ids(self, row: int) -> np.ndarray:
@@ -591,12 +709,14 @@ class Engine:
         self._prefilling.pop(row, None)
         self.rows[row] = None
         self.kv.release_row(row)
+        self._sampler_state.clear(row)
         req.status = "preempted"
         req.preemptions += 1
         self._n_preempt += 1
         self.sched.requeue(req)
 
-    def _finish(self, row: int, truncated: bool = False) -> None:
+    def _finish(self, row: int, truncated: bool = False,
+                reason: str = FINISH_STOP) -> None:
         req = self.rows[row]
         if self.paged:
             self._publish_row(row)
@@ -604,9 +724,12 @@ class Engine:
             self.kv.release_row(row)
         else:
             self.rows[row] = None
+        self._sampler_state.clear(row)
         req.done = True
         req.truncated = truncated
         req.status = "done"
+        req.finish_reason = reason
+        self._finish_counts[reason] += 1
         req.finish_time = time.time()
         self._done.append(req)
 
@@ -622,7 +745,7 @@ class Engine:
                 if st == "ok":
                     break
                 if st == "full":            # max_len hit: force-retire
-                    self._finish(i, truncated=True)
+                    self._finish(i, truncated=True, reason=FINISH_LENGTH)
                     break
                 victims = [j for j in range(self.n_rows)
                            if self.rows[j] is not None]
@@ -646,9 +769,11 @@ class Engine:
     def step(self) -> int:
         """One engine tick: expire, admit/advance prefills, decode all
         running rows, retire.  Returns the number of rows decoded."""
+        self._n_ticks += 1
         now = time.time()
         for r in self.sched.expire(now):
-            r.status = "expired"
+            r.status = "expired"       # scheduler set finish_reason
+            self._finish_counts[FINISH_DEADLINE] += 1
             self._failed.append(r)
         chunks = self._admit(now)
         # retire BEFORE decoding: a prefill that already satisfied the
@@ -682,34 +807,52 @@ class Engine:
             logits, self.pages = self._decode_paged(
                 self.params, jnp.asarray(self._tokens), self.pages,
                 jnp.asarray(table), jnp.asarray(lengths))
-            toks = self._sample(logits[:, -1])
+            # ONE fused dispatch for the whole decode batch; inactive
+            # rows are sampled-and-discarded (the counter-based PRNG
+            # makes discarded draws side-effect free)
+            res = self._run_sampler(logits[:, -1], slice(None), "decode")
             for i in active:
                 self.kv.advance(i)
-                self.rows[i].tokens.append(int(toks[i]))
-                self._tokens[i, 0] = int(toks[i])
+                self._commit_token(i, self.rows[i], res, i)
         else:
             logits, self.cache = self._decode(
                 self.params, jnp.asarray(self._tokens), self.cache)
-            toks = self._sample(logits[:, -1])
+            res = self._run_sampler(logits[:, -1], slice(None), "decode")
             for i in active:
-                self.rows[i].tokens.append(int(toks[i]))
-                self._tokens[i, 0] = int(toks[i])
+                self._commit_token(i, self.rows[i], res, i)
         self._retire()
         self.sched.account(chunks, len(active))
         return len(active)
+
+    def _stop_reason(self, r: Request) -> Optional[str]:
+        """Terminal check for a decoding row: EOS or a stop sequence
+        ("stop"), else the max_tokens budget ("length")."""
+        if r.tokens and (r.tokens[-1] == self.eos_id
+                         or sampling_lib.match_stop(r.tokens,
+                                                    r.sampling.stop)):
+            return FINISH_STOP
+        if len(r.tokens) >= r.sampling.max_tokens:
+            return FINISH_LENGTH
+        return None
 
     def _retire(self) -> None:
         for i, r in enumerate(self.rows):
             if r is None or i in self._prefilling:
                 continue
-            if (r.tokens and r.tokens[-1] == self.eos_id) \
-                    or len(r.tokens) >= r.max_new_tokens:
-                self._finish(i)
+            reason = self._stop_reason(r)
+            if reason is not None:
+                self._finish(i, reason=reason)
+
+    def pending(self) -> bool:
+        """True while the engine has work: queued requests or occupied
+        rows.  The public loop condition for callers driving their own
+        ``step()`` loop (streamed serving)."""
+        return bool(len(self.sched) or any(r is not None
+                                           for r in self.rows))
 
     def run(self, max_ticks: int = 10000) -> List[Request]:
         ticks = 0
-        while (len(self.sched) or any(r is not None for r in self.rows)) \
-                and ticks < max_ticks:
+        while self.pending() and ticks < max_ticks:
             self.step()
             ticks += 1
         return self._done
@@ -732,6 +875,13 @@ class Engine:
             # preempted (possibly mid-chunked-prefill) and still queued
             "preemptions": self._n_preempt,
             "tokens": sum(len(r.tokens) for r in self._done),
+            "ticks": self._n_ticks,
+            # why requests ended, and how often the fused sampler ran
+            # (decode: exactly one dispatch per decoding tick, however
+            # many distinct SamplingParams share the batch)
+            "finish_reasons": dict(self._finish_counts),
+            "sampler_dispatches": dict(self._dispatch_counts),
+            "sampler_time_s": round(self._sampler_time, 6),
         }
         if lat:
             out["latency_p50_s"] = float(np.percentile(lat, 50))
@@ -751,11 +901,14 @@ def generate_batch(model: Model, params, prompts: List[np.ndarray],
                    max_new_tokens: int = 32, max_len: int = 512,
                    slots: int = 4, eos_id: int = 1,
                    extras: Optional[List[Dict]] = None,
+                   sampling: Optional[List[SamplingParams]] = None,
                    **kwargs) -> List[List[int]]:
     """Convenience wrapper: submit all prompts, run to completion.
 
-    All prompts are enqueued up front, so the queue bound is sized to
-    the batch (backpressure is for live serving, not batch jobs)."""
+    ``sampling``: optional per-prompt SamplingParams (its max_tokens
+    overrides ``max_new_tokens`` for that prompt).  All prompts are
+    enqueued up front, so the queue bound is sized to the batch
+    (backpressure is for live serving, not batch jobs)."""
     kwargs.setdefault("scheduler",
                       SchedulerConfig(max_queue=max(len(prompts), 1)))
     eng = Engine(model, params, slots=slots, max_len=max_len, eos_id=eos_id,
@@ -763,6 +916,7 @@ def generate_batch(model: Model, params, prompts: List[np.ndarray],
     for i, p in enumerate(prompts):
         ok = eng.submit(Request(uid=i, prompt=np.asarray(p, np.int32),
                                 max_new_tokens=max_new_tokens,
+                                sampling=sampling[i] if sampling else None,
                                 extras=extras[i] if extras else None))
         assert ok, f"request {i} rejected (queue/pool sizing)"
     done = eng.run()

@@ -31,6 +31,8 @@ import dataclasses
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
+from repro.serving.api import FINISH_DEADLINE
+
 POLICIES = ("fifo", "priority")
 
 
@@ -95,7 +97,9 @@ class Scheduler:
         The deadline bounds the wait *before first admission* only: a
         preempted request re-enters with its original submit_time, but
         it already served tokens — expiring it would silently discard
-        them, so anything ever admitted is exempt."""
+        them, so anything ever admitted is exempt.  Expired requests
+        get ``finish_reason = "deadline"`` (the streaming API's
+        terminal marker) here, where the expiry decision is made."""
         if self.cfg.deadline_s is None:
             return []
         dead = []
@@ -104,6 +108,8 @@ class Scheduler:
             for r in q:
                 if getattr(r, "first_admit_time", None) is None \
                         and now - r.submit_time > self.cfg.deadline_s:
+                    if hasattr(r, "finish_reason"):
+                        r.finish_reason = FINISH_DEADLINE
                     dead.append(r)
                 else:
                     kept.append(r)

@@ -412,15 +412,19 @@ def _tiny_model():
 
 def test_prefill_samples_with_request_temperature():
     """Admitting into slot i>0 must use THAT request's temperature, not
-    slot 0's (the seed bug: temps[0])."""
+    slot 0's (the seed bug: temps[0]).  Under the fused sampler the
+    prefill dispatch samples the sliced row state — the slice must
+    carry the admitted request's temperature."""
     _, m, params = _tiny_model()
     seen = []
 
     class Spy(Engine):
-        def _sample(self, logits, temps=None):
-            if temps is not None:
-                seen.append(list(temps))
-            return super()._sample(logits, temps)
+        def _run_sampler(self, logits, sl, kind):
+            if kind == "prefill":
+                seen.append(
+                    [float(t) for t in
+                     self._sampler_state.batch(sl)["temperature"]])
+            return super()._run_sampler(logits, sl, kind)
 
     eng = Spy(m, params, slots=2, max_len=64, eos_id=-1)
     eng.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32) + 3,

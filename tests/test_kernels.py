@@ -441,3 +441,124 @@ def test_kernel_matches_core_paths():
                                rtol=2e-5, atol=2e-5)
     np.testing.assert_allclose(np.asarray(y_scan), np.asarray(y_mat),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# sampling filters: radix-select top-k kernel + top-p / min-p vs oracles
+# ---------------------------------------------------------------------------
+
+from repro.kernels.topk import NEG as TOPK_NEG  # noqa: E402
+from repro.kernels.topk import topk_mask  # noqa: E402
+from repro.serving.sampling import minp_mask, topp_mask  # noqa: E402
+
+
+def _mask_of(x):
+    return np.asarray(jnp.asarray(x, jnp.float32)) <= TOPK_NEG / 2
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("k", [1, 8, None, 0])   # None => k = V (disabled)
+def test_topk_kernel_parity_uniform_k(dtype, k):
+    """Pallas radix-select (interpret) AND the lax fallback vs the numpy
+    sort oracle: identical surviving values, identical masks — ties at
+    the threshold all survive in every implementation."""
+    b, v = 4, 203                          # v % 128 != 0: pad path
+    x = jnp.asarray(np.random.default_rng(k or 77).standard_normal(
+        (b, v)), dtype)
+    kk = np.full((b,), v if k is None else k, np.int32)
+    want = ref.topk_mask_ref(x, kk, fill=TOPK_NEG)
+    got_pallas = topk_mask(x, kk, use_pallas=True, interpret=True)
+    got_lax = topk_mask(x, kk, use_pallas=False)
+    for name, got in (("pallas", got_pallas), ("lax", got_lax)):
+        np.testing.assert_array_equal(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            err_msg=f"{name} k={k} {dtype}")
+    if k and k < v:
+        # at least k survivors; bf16 rounding may tie at the threshold,
+        # and ties all survive, so the mask can be slightly smaller
+        assert _mask_of(got_pallas).sum(axis=1).max() <= v - k
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topk_kernel_parity_ragged_per_row_k(dtype):
+    """Mixed per-row k in ONE dispatch (the fused-sampler contract):
+    k=1, small, V, disabled(0), and mid — all against the oracle."""
+    rng = np.random.default_rng(3)
+    for v in (64, 129, 500):
+        x = jnp.asarray(rng.standard_normal((5, v)) * 4, dtype)
+        kk = np.asarray([1, 8, v, 0, max(v // 3, 1)], np.int32)
+        want = ref.topk_mask_ref(x, kk, fill=TOPK_NEG)
+        got = topk_mask(x, kk, use_pallas=True, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            err_msg=f"v={v}")
+        np.testing.assert_array_equal(
+            np.asarray(topk_mask(x, kk, use_pallas=False), np.float32),
+            np.asarray(want, np.float32), err_msg=f"lax v={v}")
+
+
+def test_topk_kernel_signed_zero_threshold_parity():
+    """A +-0.0 threshold: float compares treat -0.0 == +0.0 but their
+    bit patterns differ — the radix kernel canonicalizes zeros so its
+    mask matches the float-comparing oracle and fallback exactly."""
+    row = np.asarray([1.0, 0.0, -0.0, -1.0], np.float32)
+    x = jnp.asarray(np.stack([row, -row]))
+    kk = np.asarray([2, 2], np.int32)       # threshold lands on +-0.0
+    want = ref.topk_mask_ref(x, kk, fill=TOPK_NEG)
+    got_p = topk_mask(x, kk, use_pallas=True, interpret=True)
+    got_l = topk_mask(x, kk, use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got_l), np.asarray(want))
+    # both zeros tie at the threshold: all three survive in row 0
+    assert (~_mask_of(got_p)[0]).sum() == 3
+
+
+def test_topk_kernel_exact_with_ties():
+    """Duplicated values straddling the threshold: value-threshold
+    semantics keep ALL ties, in kernel, fallback, and oracle alike."""
+    row = np.asarray([3.0, 3.0, 3.0, 1.0, 1.0, -2.0, 0.5, 3.0],
+                     np.float32)
+    x = jnp.asarray(np.stack([row, row]))
+    kk = np.asarray([2, 5], np.int32)     # k=2 cuts inside the 3.0 run
+    want = ref.topk_mask_ref(x, kk, fill=TOPK_NEG)
+    got = topk_mask(x, kk, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert (~_mask_of(got)[0]).sum() == 4    # all four 3.0s survive
+    np.testing.assert_array_equal(
+        np.asarray(topk_mask(x, kk, use_pallas=False)), np.asarray(want))
+
+
+@pytest.mark.parametrize("p", [0.1, 0.9, 1.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_topp_mask_parity(p, dtype):
+    """Nucleus filter vs the numpy descending-walk oracle, including
+    per-row mixed p in one call."""
+    rng = np.random.default_rng(int(p * 10))
+    z = jnp.asarray(rng.standard_normal((4, 157)) * 3, dtype)
+    pa = np.full((4,), p, np.float32)
+    got = topp_mask(jnp.asarray(z, jnp.float32), jnp.asarray(pa))
+    want = ref.topp_mask_ref(jnp.asarray(z, jnp.float32), pa)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    if p == 1.0:
+        assert not _mask_of(got).any()       # disabled: nothing filtered
+    # ragged per-row p
+    pm = np.asarray([p, 1.0, 0.5, 0.05], np.float32)
+    got = topp_mask(jnp.asarray(z, jnp.float32), jnp.asarray(pm))
+    want = ref.topp_mask_ref(jnp.asarray(z, jnp.float32), pm)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_topp_always_keeps_top1_and_minp_parity():
+    """p -> 0 still keeps the argmax (prefix-mass rule), and the min-p
+    filter matches its oracle across mixed rows."""
+    rng = np.random.default_rng(9)
+    z = jnp.asarray(rng.standard_normal((3, 97)) * 5, jnp.float32)
+    got = topp_mask(z, jnp.asarray(np.full((3,), 1e-6, np.float32)))
+    kept = ~_mask_of(got)
+    assert (kept.sum(axis=1) >= 1).all()
+    am = np.asarray(jnp.argmax(z, -1))
+    assert all(kept[i, am[i]] for i in range(3))
+    mp = np.asarray([0.0, 0.2, 1.0], np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(minp_mask(z, jnp.asarray(mp))),
+        np.asarray(ref.minp_mask_ref(z, mp)))

@@ -9,6 +9,14 @@ run through the engine with ``prefix_cache`` on vs off vs
 three, and ``leak_check`` (including refcounts) must pass after every
 run with zero pages left beyond what the prefix tree retains.
 
+Harness 1b (seeded sampling): the same differential property for
+temperature > 0 — random per-request SamplingParams (temperature,
+top-k, top-p, min-p, explicit and engine-drawn seeds) must be
+token-identical across prefix on/off, every chunk size, pools down to
+oversubscription (preemption-recompute), AND a fully-provisioned
+``generate_batch`` — the counter-based (seed, position) PRNG streams
+make sampled decode exactly as replayable as greedy.
+
 Harness 2 (stateful): a hypothesis ``RuleBasedStateMachine`` (falling
 back to the conftest stub's deterministic random-walk mode when the real
 package is absent) over raw ``PageAllocator`` + ``PagedKVCache``
@@ -30,6 +38,7 @@ import jax  # noqa: E402
 
 from repro.configs.base import ArchConfig
 from repro.models import build
+from repro.serving.api import SamplingParams
 from repro.serving.engine import Engine, Request, generate_batch
 from repro.serving.paged_cache import PagedKVCache
 from repro.serving.scheduler import SchedulerConfig
@@ -83,13 +92,14 @@ def _workload(rng):
 
 
 def _run(m, params, prompts, prios, max_new, *, prefix, chunk, num_pages,
-         deadline=None):
+         deadline=None, sampling=None):
     eng = Engine(m, params, max_concurrency=3, max_len=MAX_LEN, eos_id=-1,
                  page_size=PAGE, num_pages=num_pages, prefix_cache=prefix,
                  prefill_chunk=chunk,
                  scheduler=SchedulerConfig(policy="priority", max_queue=64,
                                            deadline_s=deadline))
     reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new,
+                    sampling=sampling[i] if sampling else None,
                     priority=prios[i]) for i, p in enumerate(prompts)]
     accepted = {r.uid for r in reqs if eng.submit(r)}
     done = eng.run()
@@ -205,6 +215,102 @@ def test_fuzz_preemption_mid_chunked_prefill(tiny):
     assert stats["hit_tokens"] > 0, \
         "mid-prefill preemption did not publish landed pages"
     assert stats["prefill_chunks"] > len(long_p) // 4
+
+
+# ---------------------------------------------------------------------------
+# seeded sampling: temperature > 0 is exactly as replayable as greedy
+# ---------------------------------------------------------------------------
+
+def _sampling_params(rng, max_new):
+    """Random per-request SamplingParams: mixed greedy/sampled rows,
+    truncation knobs, penalties, and both explicit and engine-drawn
+    (seed=None) seeds."""
+    t = [0.0, 0.7, 1.3][int(rng.integers(3))]
+    return SamplingParams(
+        temperature=t,
+        top_k=[0, 5, 40][int(rng.integers(3))],
+        top_p=[1.0, 0.9][int(rng.integers(2))],
+        min_p=[0.0, 0.05][int(rng.integers(2))],
+        repetition_penalty=[1.0, 1.2][int(rng.integers(2))],
+        presence_penalty=[0.0, 0.3][int(rng.integers(2))],
+        seed=None if rng.random() < 0.25 else int(rng.integers(10 ** 6)),
+        max_tokens=max_new)
+
+
+@settings(max_examples=FAST_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_fuzz_seeded_sampling_token_identical(tiny, seed):
+    """Sampled decode (mixed greedy/temperature/top-k/top-p/min-p/
+    penalty rows, explicit + engine-drawn seeds) is token-identical
+    across prefix-cache on/off, chunked prefill sizes, oversubscribed
+    pools (preemption-recompute), and a fully-provisioned
+    generate_batch."""
+    m, params = tiny
+    rng = np.random.default_rng(seed)
+    prompts, prios, max_new = _workload(rng)
+    sps = [_sampling_params(rng, max_new) for _ in prompts]
+    num_pages = int(rng.integers(8, 26))
+    chunk = [None, 1, 3, PAGE][int(rng.integers(4))]
+
+    on, acc_on, _, eng = _run(m, params, prompts, prios, max_new,
+                              prefix=True, chunk=chunk,
+                              num_pages=num_pages, sampling=sps)
+    off, acc_off, _, _ = _run(m, params, prompts, prios, max_new,
+                              prefix=False, chunk=None,
+                              num_pages=num_pages, sampling=sps)
+    assert acc_on == acc_off == set(range(len(prompts)))
+    assert on == off, (on, off, chunk, num_pages)
+    # fully-provisioned batch (no preemption possible): same tokens —
+    # preempt-and-recompute replays the identical PRNG stream
+    batch = generate_batch(m, params, prompts, max_new_tokens=max_new,
+                           max_len=MAX_LEN, slots=3, eos_id=-1,
+                           page_size=PAGE, sampling=sps)
+    assert batch == [on[uid] for uid in sorted(on)]
+
+
+@pytest.mark.slow
+@settings(max_examples=SLOW_EXAMPLES, deadline=None)
+@given(seed=st.integers(2 * 10 ** 6, 3 * 10 ** 6))
+def test_fuzz_seeded_sampling_full_sweep(tiny, seed):
+    """Slow tier: the sampled workload across every chunk size and the
+    prefix on/off axis, one workload per example."""
+    m, params = tiny
+    rng = np.random.default_rng(seed)
+    prompts, prios, max_new = _workload(rng)
+    sps = [_sampling_params(rng, max_new) for _ in prompts]
+    num_pages = int(rng.integers(8, 26))
+    outs = []
+    for prefix, chunk in [(False, None), (True, None), (True, 1),
+                          (True, 3), (True, PAGE), (True, 3 * PAGE)]:
+        toks, acc, _, _ = _run(m, params, prompts, prios, max_new,
+                               prefix=prefix, chunk=chunk,
+                               num_pages=num_pages, sampling=sps)
+        outs.append(toks)
+        assert acc == set(range(len(prompts)))
+    assert all(o == outs[0] for o in outs[1:])
+
+
+def test_fuzz_seeded_sampling_preemption_mid_prefill(tiny):
+    """The PR-4 mid-chunked-prefill preemption scenario with sampled
+    rows: the tight pool must reproduce the fully-provisioned sampled
+    tokens, preemptions and all."""
+    m, params = tiny
+    rng = np.random.default_rng(11)
+    short = [rng.integers(2, TINY.vocab_size, size=6).astype(np.int32)
+             for _ in range(2)]
+    long_p = rng.integers(2, TINY.vocab_size, size=40).astype(np.int32)
+    prompts = short + [long_p]
+    prios = [0] * len(prompts)
+    sps = [SamplingParams(temperature=1.1, top_p=0.9, seed=50 + i,
+                          max_tokens=16) for i in range(len(prompts))]
+
+    full, _, _, _ = _run(m, params, prompts, prios, 16, prefix=True,
+                         chunk=4, num_pages=None, sampling=sps)
+    tight, _, _, eng = _run(m, params, prompts, prios, 16, prefix=True,
+                            chunk=4, num_pages=10, sampling=sps)
+    assert tight == full
+    assert eng.stats()["preemptions"] > 0, \
+        "pool sizing did not force a preemption"
 
 
 # ---------------------------------------------------------------------------
