@@ -1,0 +1,185 @@
+"""Perf-trajectory regression gate over the committed BENCH baselines.
+
+Compares a freshly produced bench JSON (``benchmarks/serving_bench.py``
+or ``benchmarks/policy_bench.py``) against the canonical committed
+baseline (``BENCH_serving.json`` / ``BENCH_policy.json``) with
+per-key tolerance classes:
+
+- **EXACT** — workload-shape keys (request counts, concurrency levels,
+  mixes, config names) and correctness booleans (``tokens_match``,
+  ``deterministic_rerun``).  Any drift is a failure: either the bench
+  definition changed (update the baseline deliberately) or a
+  correctness invariant broke.
+- **TIGHT** — deterministic-per-workload counters (tokens generated
+  under greedy decoding, prefix-hit/pages-shared accounting, budget
+  errors).  Small relative tolerance absorbs scheduling jitter in
+  arrival-timed sections while still catching real accounting bugs.
+- **PERF** — wall-clock-derived numbers (tok/s, latency percentiles,
+  sampler seconds, arrival-dependent queue counters).  Wide band:
+  CI machines are noisy; the trajectory matters, not the third digit.
+
+Two gate levels:
+
+- ``--level invariants`` (the blocking CI step) checks EXACT + TIGHT
+  and ignores PERF drift — a machine being slow never blocks a merge,
+  a correctness or accounting regression always does.
+- ``--level all`` (the advisory CI step) also enforces the PERF band,
+  surfacing genuine slowdowns as a non-blocking signal first.
+
+Exit code 0 = within tolerance, 1 = regression, 2 = usage/IO error.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --kind serving --baseline BENCH_serving.json \
+        --fresh BENCH_serving.fresh.json --level invariants
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Iterator, Tuple
+
+EXACT, TIGHT, PERF = "EXACT", "TIGHT", "PERF"
+
+# Leaf-key classification (matched on the final path component).
+# Workload shape + correctness booleans: must not drift at all.
+_EXACT_KEYS = {
+    "smoke", "levels", "concurrency", "requests", "users", "max_new",
+    "sys_prompt_len", "tail_len", "prefill_chunk", "mix", "name",
+    "hashed", "config", "tokens_match", "deterministic_rerun",
+    "budget", "budget_target", "n_slots", "page_size",
+}
+# Deterministic-per-workload accounting: tight relative band.
+_TIGHT_KEYS = {
+    "tokens", "done", "prefix_hit_rate", "pages_saved_frac",
+    "pages_shared", "pages_fresh", "hit_tokens", "miss_tokens",
+    "indexed_pages", "evictions", "budget_error", "worst_budget_error",
+    "bank_real_params", "bank_total_params", "model_real_params",
+    "prefix.hit_tokens", "prefix.miss_tokens", "prefix.indexed_pages",
+    "prefix.evictions", "kv.pages_shared", "kv.pages_fresh",
+    "engine.tokens", "engine.done", "kv.leak_anomalies",
+}
+# Sections whose token streams are sampled / arrival-order dependent:
+# even "tokens" class keys degrade to PERF there (stop sequences fire
+# on sampled tokens; level benches admit on wall-clock arrivals).
+_PERF_SECTIONS = ("mixed_sampling", "levels", "obs_overhead")
+
+
+def classify(path: Tuple[str, ...]) -> str:
+    leaf = path[-1]
+    if leaf in _EXACT_KEYS:
+        return EXACT
+    if leaf in _TIGHT_KEYS:
+        if any(s in path for s in _PERF_SECTIONS):
+            return PERF
+        return TIGHT
+    return PERF
+
+
+def walk(node, path=()) -> Iterator[Tuple[Tuple[str, ...], object]]:
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from walk(v, path + (str(k),))
+    elif isinstance(node, list) and any(isinstance(v, (dict, list))
+                                        for v in node):
+        # lists of rows recurse (index as path component); flat scalar
+        # lists (bucket edges, mixes) stay whole-value leaves
+        for i, v in enumerate(node):
+            yield from walk(v, path + (str(i),))
+    else:
+        yield path, node
+
+
+def _close(a, b, rel: float, abs_slack: float) -> bool:
+    if isinstance(a, bool) or isinstance(b, bool) \
+            or not isinstance(a, (int, float)) \
+            or not isinstance(b, (int, float)):
+        return a == b
+    return abs(a - b) <= abs_slack + rel * max(abs(a), abs(b))
+
+
+def compare(baseline: dict, fresh: dict, *, level: str,
+            tight_tol: float, perf_tol: float, perf_abs: float = 0.25):
+    """Yields (severity, message) problems; severity 'fail'|'warn'."""
+    fresh_map = dict(walk(fresh))
+    base_map = dict(walk(baseline))
+    for path, bval in base_map.items():
+        key = ".".join(path)
+        cls = classify(path)
+        if path not in fresh_map:
+            yield "fail", f"missing key in fresh results: {key}"
+            continue
+        fval = fresh_map.pop(path)
+        if cls == EXACT:
+            if fval != bval:
+                yield "fail", (f"[EXACT] {key}: baseline {bval!r} "
+                               f"!= fresh {fval!r}")
+        elif cls == TIGHT:
+            if not _close(fval, bval, tight_tol, 1.0):
+                yield "fail", (f"[TIGHT] {key}: baseline {bval!r} vs "
+                               f"fresh {fval!r} (tol {tight_tol:.0%})")
+        elif level == "all":
+            # relative band + absolute slack: near-zero PERF values
+            # (overhead fractions, sub-second latencies) would otherwise
+            # flap on any noise
+            if not _close(fval, bval, perf_tol, perf_abs):
+                yield "fail", (f"[PERF] {key}: baseline {bval!r} vs "
+                               f"fresh {fval!r} (tol {perf_tol:.0%})")
+    for path in fresh_map:
+        yield "warn", f"new key not in baseline: {'.'.join(path)}"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kind", choices=("serving", "policy"),
+                    required=True, help="which bench family (sets the "
+                    "default baseline path)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed canonical JSON "
+                         "(default BENCH_<kind>.json)")
+    ap.add_argument("--fresh", required=True,
+                    help="freshly produced bench JSON to gate")
+    ap.add_argument("--level", choices=("invariants", "all"),
+                    default="invariants",
+                    help="invariants: EXACT+TIGHT only (blocking CI "
+                         "gate); all: also enforce the PERF band "
+                         "(advisory CI gate)")
+    ap.add_argument("--tight-tol", type=float, default=0.05,
+                    help="relative tolerance for TIGHT keys")
+    ap.add_argument("--perf-tol", type=float, default=0.75,
+                    help="relative tolerance for PERF keys "
+                         "(--level all)")
+    ap.add_argument("--perf-abs", type=float, default=0.25,
+                    help="absolute slack for PERF keys (--level all)")
+    args = ap.parse_args()
+    baseline_path = args.baseline or f"BENCH_{args.kind}.json"
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+        with open(args.fresh) as f:
+            fresh = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"check_regression: cannot load inputs: {e}",
+              file=sys.stderr)
+        return 2
+
+    fails = warns = 0
+    for sev, msg in compare(baseline, fresh, level=args.level,
+                            tight_tol=args.tight_tol,
+                            perf_tol=args.perf_tol,
+                            perf_abs=args.perf_abs):
+        if sev == "fail":
+            fails += 1
+            print(f"FAIL  {msg}")
+        else:
+            warns += 1
+            print(f"warn  {msg}")
+    n = len(dict(walk(baseline)))
+    print(f"check_regression[{args.kind}/{args.level}]: {n} baseline "
+          f"keys, {fails} failures, {warns} warnings "
+          f"({'REGRESSION' if fails else 'ok'})")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -25,7 +25,21 @@ sampler's one-dispatch-per-tick contract), reporting tok/s, per-tick
 sampler overhead, and the finish-reason split — plus a determinism
 cross-check (a rerun with the same seeds must reproduce every token).
 
+A fourth section measures **observability overhead**: the shared-prefix
+workload with the span tracer off vs on, reporting the throughput
+delta and a bitwise token-identity cross-check (tracing must never
+change what the engine emits).  ``--trace-out`` exports the traced
+arm's Perfetto file (the CI artifact).
+
+All counter numbers are workload-only deltas of the engine's metrics
+registry (``repro.obs``) — snapshot after warmup, diff at the end —
+instead of hand-rolled per-key subtraction.
+
     PYTHONPATH=src python -m benchmarks.serving_bench [--smoke]
+        [--trace-out serving_trace.json]
+
+``benchmarks/check_regression.py`` compares the emitted JSON against
+the committed ``BENCH_serving.json`` baseline.
 """
 from __future__ import annotations
 
@@ -40,9 +54,19 @@ import numpy as np
 import repro.configs as C
 from repro.configs.reduced import reduced
 from repro.models import build
-from repro.serving.api import SamplingParams
+from repro.obs import Tracer, diff_snapshots
+from repro.serving.api import FINISH_REASONS, SamplingParams
 from repro.serving.engine import Engine, Request
 from repro.serving.scheduler import SchedulerConfig
+
+# point-in-time gauges: meaningless as workload deltas, dropped from rows
+_GAUGES = ("kv.pages_in_use", "kv.pages_free", "sched.queue_depth")
+
+
+def _workload_delta(eng, base):
+    """Registry delta since ``base``, gauges dropped."""
+    d = diff_snapshots(eng.metrics.snapshot(), base)
+    return {k: v for k, v in d.items() if k not in _GAUGES}
 
 
 def _configs():
@@ -73,7 +97,7 @@ def bench_level(model, params, cfg, *, concurrency: int, requests: int,
                        max_new_tokens=2))
     eng.run()
     eng._done.clear()
-    warm = eng.stats()          # counter baseline: report workload deltas
+    base = eng.metrics.snapshot()   # counter baseline: report deltas
 
     # offered load: one request per gap, ~2x one row's sustained rate
     gap = 0.0 if requests <= concurrency else 0.01
@@ -87,32 +111,20 @@ def bench_level(model, params, cfg, *, concurrency: int, requests: int,
         eng.step()
     wall = time.time() - t0
     stats = eng.stats()
-    total_tokens = stats.pop("tokens")
-    # cumulative counters still include the warmup request; subtract the
-    # post-warmup baseline so every number in the row covers the same
-    # (timed) workload.  Gauges (pages_in_use, queue_depth, ...) and
-    # workload-only stats (latency percentiles, done) pass through.
-    counters = ("submitted", "admitted", "queue_rejected", "requeued",
-                "queue_expired", "prefill_chunks", "decoded_tokens",
-                "prefill_ticks", "decode_ticks", "interleaved_ticks",
-                "preemptions", "failed", "pages_fresh", "pages_shared",
-                "cow_copies", "hit_tokens", "miss_tokens",
-                "indexed_pages", "evictions", "ticks")
-    for k in counters:
-        if k in stats:
-            stats[k] -= warm.get(k, 0)
-    # nested counter dicts + cumulative sampler time: same delta rule
-    for k in ("sampler_dispatches", "finish_reasons"):
-        stats[k] = {kk: vv - warm.get(k, {}).get(kk, 0)
-                    for kk, vv in stats[k].items()}
-    stats["sampler_time_s"] = round(
-        stats["sampler_time_s"] - warm.get("sampler_time_s", 0.0), 6)
+    d = _workload_delta(eng, base)
+    total_tokens = d["engine.tokens"]
     out = {"concurrency": concurrency, "requests": requests,
            "tokens": total_tokens,
            "wall_s": round(wall, 3),
-           "tok_per_s": round(total_tokens / wall, 2)}
-    out.update({k: round(v, 4) if isinstance(v, float) else v
-                for k, v in stats.items()})
+           "tok_per_s": round(total_tokens / wall, 2),
+           "done": stats["done"]}
+    # latency/TTFT percentiles come from the workload's request set
+    # (warmup requests were dropped from _done above)
+    for k in ("latency_p50_s", "latency_p99_s",
+              "ttft_p50_s", "ttft_mean_s"):
+        if k in stats:
+            out[k] = round(stats[k], 4)
+    out["metrics"] = d
     return out
 
 
@@ -145,9 +157,9 @@ def bench_shared_prefix(model, params, cfg, *, concurrency: int,
         eng.run()
         eng._done.clear()
         # cumulative engine/tree counters include the warmup admissions;
-        # report workload-only deltas so the headline hit-rate and
-        # pages-saved numbers measure the measured requests alone
-        warm = eng.stats()
+        # report workload-only registry deltas so the headline hit-rate
+        # and pages-saved numbers measure the measured requests alone
+        base = eng.metrics.snapshot()
 
         reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
                 for i, p in enumerate(prompts)]
@@ -158,13 +170,13 @@ def bench_shared_prefix(model, params, cfg, *, concurrency: int,
         wall = time.time() - t0
         eng.kv.leak_check()
         stats = eng.stats()
-        tokens = stats.pop("tokens")
+        d = _workload_delta(eng, base)
+        tokens = d["engine.tokens"]
 
-        def delta(key):
-            return stats.get(key, 0) - warm.get(key, 0)
-
-        hit, miss = delta("hit_tokens"), delta("miss_tokens")
-        shared, fresh = delta("pages_shared"), delta("pages_fresh")
+        hit = d.get("prefix.hit_tokens", 0)
+        miss = d.get("prefix.miss_tokens", 0)
+        shared = d.get("kv.pages_shared", 0)
+        fresh = d.get("kv.pages_fresh", 0)
         out = {"tok_per_s": round(tokens / wall, 2),
                "wall_s": round(wall, 3),
                "ttft_mean_s": round(stats.get("ttft_mean_s", 0.0), 4),
@@ -175,8 +187,8 @@ def bench_shared_prefix(model, params, cfg, *, concurrency: int,
                "pages_fresh": fresh,
                "pages_saved_frac": round(shared / (shared + fresh), 4)
                if shared + fresh else 0.0,
-               "prefill_chunks": delta("prefill_chunks"),
-               "preemptions": delta("preemptions")}
+               "prefill_chunks": d["sched.prefill_chunks"],
+               "preemptions": d["engine.preemptions"]}
         return out, {r.uid: list(r.tokens) for r in reqs}
 
     off, toks_off = run(False)
@@ -245,30 +257,30 @@ def bench_mixed_sampling(model, params, cfg, *, concurrency: int,
                            sampling=SamplingParams(max_tokens=2)))
         eng.run()                  # an all-greedy batch, alone
         eng._done.clear()
-        warm = eng.stats()         # counter baseline: report deltas
+        base = eng.metrics.snapshot()  # counter baseline: report deltas
         t0 = time.time()
         for uid, (prompt, sp, _) in enumerate(reqs_spec):
             eng.submit(Request(uid=uid, prompt=prompt.copy(),
                                sampling=sp))
         done = eng.run()
         wall = time.time() - t0
-        stats = eng.stats()
-        ticks = stats["ticks"] - warm["ticks"]
-        sampler_s = stats["sampler_time_s"] - warm["sampler_time_s"]
-        disp = {k: v - warm["sampler_dispatches"][k]
-                for k, v in stats["sampler_dispatches"].items()}
+        d = _workload_delta(eng, base)
+        ticks = d["engine.ticks"]
+        sampler_s = d["sampler.dispatch_s"]["sum"]
         toks = {r.uid: list(r.tokens) for r in done}
-        return {"tok_per_s": round(stats["tokens"] / wall, 2),
+        return {"tok_per_s": round(d["engine.tokens"] / wall, 2),
                 "wall_s": round(wall, 3),
                 "ticks": ticks,
                 "sampler_time_s": round(sampler_s, 4),
                 "sampler_ms_per_tick": round(1e3 * sampler_s
                                              / max(ticks, 1), 3),
                 "sampler_frac": round(sampler_s / wall, 4),
-                "sampler_dispatches": disp,
-                "finish_reasons": {k: v - warm["finish_reasons"][k]
-                                   for k, v in
-                                   stats["finish_reasons"].items()}}, toks
+                "sampler_dispatches": {
+                    k: d[f"sampler.dispatches.{k}"]
+                    for k in ("prefill", "decode")},
+                "finish_reasons": {
+                    k: d[f"engine.finish.{k}"]
+                    for k in FINISH_REASONS}}, toks
 
     a, toks_a = run()
     _, toks_b = run()
@@ -285,7 +297,73 @@ def bench_mixed_sampling(model, params, cfg, *, concurrency: int,
     return row
 
 
-def main(smoke: bool = False, out_json: str = "BENCH_serving.json") -> dict:
+def bench_obs_overhead(model, params, cfg, *, concurrency: int,
+                       users: int, sys_len: int, tail_len: int,
+                       max_new: int, max_len: int, page_size: int,
+                       prefill_chunk: int,
+                       trace_out: str = None) -> dict:
+    """Tracer off vs on over the shared-prefix workload (the busiest
+    instrumented path: chunked prefill + prefix hits + COW + decode).
+
+    Acceptance target: < 3% tok/s regression with full tracing.  Also
+    cross-checks that tracing is bitwise inert (same tokens) and, with
+    ``trace_out``, exports the traced arm for Perfetto (CI artifact).
+    """
+    rng = np.random.default_rng(3)
+    sys_prompt = rng.integers(2, cfg.vocab_size,
+                              size=sys_len).astype(np.int32)
+    prompts = [np.concatenate([sys_prompt, rng.integers(
+        2, cfg.vocab_size, size=tail_len).astype(np.int32)])
+        for _ in range(users)]
+
+    def run(trace: bool):
+        tracer = Tracer(enabled=trace)
+        eng = Engine(model, params, max_concurrency=concurrency,
+                     max_len=max_len, eos_id=-1, page_size=page_size,
+                     prefix_cache=True, prefill_chunk=prefill_chunk,
+                     tracer=tracer,
+                     scheduler=SchedulerConfig(max_queue=users + 2))
+        warm_tail = np.asarray([2, 3] * (tail_len // 2 + 1),
+                               np.int32)[:tail_len]
+        for uid, tail in ((-1, warm_tail), (-2, warm_tail[::-1].copy())):
+            eng.submit(Request(
+                uid=uid, prompt=np.concatenate([sys_prompt, tail]),
+                max_new_tokens=2))
+        eng.run()
+        eng._done.clear()
+        reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        t0 = time.time()
+        for r in reqs:
+            eng.submit(r)
+        eng.run()
+        wall = time.time() - t0
+        tokens = sum(len(r.tokens) for r in reqs)
+        return (round(tokens / wall, 2),
+                {r.uid: list(r.tokens) for r in reqs}, tracer)
+
+    tps_off, toks_off, _ = run(False)
+    tps_on, toks_on, tracer = run(True)
+    if trace_out:
+        tracer.export(trace_out)
+        print(f"wrote trace -> {os.path.abspath(trace_out)}")
+    overhead = round((tps_off - tps_on) / tps_off, 4) if tps_off else 0.0
+    row = {"concurrency": concurrency, "users": users,
+           "sys_prompt_len": sys_len, "tail_len": tail_len,
+           "max_new": max_new, "prefill_chunk": prefill_chunk,
+           "tok_per_s_trace_off": tps_off,
+           "tok_per_s_trace_on": tps_on,
+           "overhead_frac": overhead,
+           "trace_events": len(tracer.events),
+           "tokens_match": toks_on == toks_off}
+    print(f"obs overhead @ c={concurrency}: {tps_off} tok/s untraced -> "
+          f"{tps_on} tok/s traced ({100 * overhead:+.1f}%), "
+          f"{row['trace_events']} events, match={row['tokens_match']}")
+    return row
+
+
+def main(smoke: bool = False, out_json: str = "BENCH_serving.json",
+         trace_out: str = None) -> dict:
     levels = (1, 2, 4) if smoke else (1, 4, 8)
     requests = 6 if smoke else 24
     max_new = 8 if smoke else 24
@@ -323,6 +401,13 @@ def main(smoke: bool = False, out_json: str = "BENCH_serving.json") -> dict:
         model, params, cfg, concurrency=4,
         requests=6 if smoke else 18,
         max_new=6 if smoke else 20, max_len=128, page_size=16)
+    # observability overhead: tracer off vs on, same workload
+    results["obs_overhead"] = bench_obs_overhead(
+        model, params, cfg, concurrency=8,
+        users=8 if smoke else 16,
+        sys_len=48 if smoke else 64, tail_len=8,
+        max_new=4 if smoke else 16, max_len=128, page_size=16,
+        prefill_chunk=32, trace_out=trace_out)
     with open(out_json, "w") as f:
         json.dump(results, f, indent=2)
     print(f"wrote {os.path.abspath(out_json)}")
@@ -334,5 +419,8 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI")
     ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="export the traced obs-overhead arm as Chrome "
+                         "trace-event JSON (open in Perfetto)")
     a = ap.parse_args()
-    main(smoke=a.smoke, out_json=a.out)
+    main(smoke=a.smoke, out_json=a.out, trace_out=a.trace_out)

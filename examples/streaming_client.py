@@ -15,7 +15,12 @@ stop-sequence) and the seeded requests are reproducible token-for-token
 across reruns — the per-request counter-based PRNG streams survive
 preemption and prefix caching bitwise.
 
-    PYTHONPATH=src python examples/streaming_client.py
+With ``--trace-out FILE`` every request's lifecycle (queued wait,
+prefill chunks, decode ticks) is recorded and exported as Chrome
+trace-event JSON — open it at https://ui.perfetto.dev.
+
+    PYTHONPATH=src python examples/streaming_client.py \
+        [--trace-out stream_trace.json]
 """
 import argparse
 
@@ -25,11 +30,15 @@ import numpy as np
 import repro.configs as C
 from repro.configs.reduced import reduced
 from repro.models import build
+from repro.obs import Tracer
 from repro.serving import Engine, Request, SamplingParams
 
 parser = argparse.ArgumentParser()
 parser.add_argument("--arch", default="qwen3-1.7b")
 parser.add_argument("--hashed", action="store_true")
+parser.add_argument("--trace-out", default=None, metavar="FILE",
+                    help="export per-request spans as Chrome "
+                         "trace-event JSON (open in Perfetto)")
 args = parser.parse_args()
 
 cfg = reduced(C.get(args.arch))
@@ -39,8 +48,9 @@ model = build(cfg)
 params = model.init(jax.random.PRNGKey(0))
 rng = np.random.default_rng(0)
 
+tracer = Tracer(enabled=bool(args.trace_out))
 eng = Engine(model, params, max_concurrency=2, max_len=128, eos_id=-1,
-             prefix_cache=True, prefill_chunk=16)
+             prefix_cache=True, prefill_chunk=16, tracer=tracer)
 
 # -- style 1: blocking iteration over one handle ---------------------------
 prompt = rng.integers(2, cfg.vocab_size, 12).astype(np.int32)
@@ -85,3 +95,6 @@ while eng.pending():
             print(f"  {tag:6s} += {d.new_token_ids}"
                   + (f"  [{d.finish_reason}]" if d.done else ""))
 print("finish reasons:", eng.stats()["finish_reasons"])
+if args.trace_out:
+    tracer.export(args.trace_out)
+    print(f"trace -> {args.trace_out} (open at https://ui.perfetto.dev)")

@@ -21,6 +21,13 @@ Three cold-start sources, in priority order:
   checkpoint if present, else random init.
 
 Prints per-request generations + aggregate throughput.
+
+Observability: --metrics-out dumps the full metrics-registry snapshot
+as JSON (and prints a human-readable table on exit); --trace-out
+records per-request spans (queued / prefill chunks / decode ticks /
+preemptions / COW copies) as Chrome trace-event JSON — open the file
+at https://ui.perfetto.dev.  --debug-leak-check audits the paged KV
+cache's refcounts at shutdown.
 """
 from __future__ import annotations
 
@@ -113,6 +120,15 @@ def main() -> int:
     p.add_argument("--stream", action="store_true",
                    help="print RequestOutput deltas as tokens land "
                         "instead of whole generations at the end")
+    p.add_argument("--metrics-out", default=None, metavar="FILE",
+                   help="write the metrics-registry snapshot (counters, "
+                        "gauges, latency histograms) as JSON on exit")
+    p.add_argument("--trace-out", default=None, metavar="FILE",
+                   help="record per-request spans and write Chrome "
+                        "trace-event JSON on exit (open in Perfetto)")
+    p.add_argument("--debug-leak-check", action="store_true",
+                   help="audit paged KV refcounts at shutdown; anomalies "
+                        "export as the kv.leak_anomalies metric")
     p.add_argument("--ckpt-dir", default=None)
     p.add_argument("--artifact", default=None,
                    help="serve from a compressed model artifact file")
@@ -127,9 +143,12 @@ def main() -> int:
                 "pass one, not both")
     concurrency = args.max_concurrency if args.max_concurrency is not None \
         else (args.slots if args.slots is not None else 4)
+    from repro.obs import Tracer
     from repro.serving.scheduler import SchedulerConfig
+    tracer = Tracer(enabled=bool(args.trace_out))
     engine_kwargs = dict(
         slots=concurrency, max_len=args.max_len, eos_id=-1,
+        tracer=tracer, debug_leak_check=args.debug_leak_check,
         page_size=args.page_size, num_pages=args.num_pages,
         attn_impl=args.attn_impl, prefix_cache=args.prefix_cache,
         prefill_chunk=args.prefill_chunk,
@@ -258,6 +277,18 @@ def main() -> int:
                "tok_per_s": round(total_tokens / dt, 1)}
     summary.update(stats)
     print(json.dumps(summary))
+    eng.shutdown()
+    if eng.last_leak_error:
+        print(f"LEAK CHECK FAILED:\n{eng.last_leak_error}")
+    if args.metrics_out:
+        print("--- metrics ---")
+        print(eng.metrics.render())
+        eng.metrics.export(args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if args.trace_out:
+        tracer.export(args.trace_out)
+        print(f"trace -> {args.trace_out} "
+              f"(open at https://ui.perfetto.dev)")
     return 0
 
 

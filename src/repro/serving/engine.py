@@ -57,7 +57,7 @@ mesh.
 from __future__ import annotations
 
 import dataclasses
-import functools
+import os
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -66,6 +66,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.transformer import Model
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import ENGINE_PID, REQUEST_PID, Tracer
 from repro.serving import sampling as sampling_lib
 from repro.serving.api import (FINISH_DEADLINE, FINISH_LENGTH, FINISH_STOP,
                                FINISH_REASONS, RequestHandle, SamplingParams)
@@ -226,7 +228,10 @@ class Engine:
                  attn_impl: str = "ref", paged: Optional[bool] = None,
                  prefix_cache: bool = False,
                  prefill_chunk: Optional[int] = None,
-                 max_logprobs: int = 8):
+                 max_logprobs: int = 8,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None,
+                 debug_leak_check: bool = False):
         """max_concurrency (alias: slots) fixes the decode batch width.
 
         Paged knobs (decoder kinds): ``page_size`` tokens per KV page;
@@ -246,12 +251,25 @@ class Engine:
         assigns per-request sampling seeds to requests that did not
         pin one — for a fixed submit order the whole run is
         reproducible.
+
+        Observability: ``metrics`` is the registry every component
+        (engine, scheduler, paged cache, fused sampler) publishes into
+        (default: a fresh private one — ``Engine.stats()`` stays a thin
+        compat view over it); ``tracer`` records per-request spans for
+        Perfetto export (default: disabled, near-zero overhead).
+        ``debug_leak_check`` (or env REPRO_DEBUG_LEAK_CHECK=1) makes
+        ``shutdown()`` run the paged cache's refcount audit and export
+        anomalies as the ``kv.leak_anomalies`` metric.
         """
         self.model = model
         self.params = params
         rows = max_concurrency if max_concurrency is not None else slots
         self.n_rows = rows
         self.eos_id = eos_id
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer(enabled=False)
+        self.debug_leak_check = bool(
+            debug_leak_check or os.environ.get("REPRO_DEBUG_LEAK_CHECK"))
         self.paged = (model.decode_paged is not None) if paged is None \
             else paged
         if self.paged and model.decode_paged is None:
@@ -264,7 +282,8 @@ class Engine:
             raise ValueError(f"prefill_chunk must be >= 1: {prefill_chunk}")
         self.prefix_cache = prefix_cache
         self.prefill_chunk = prefill_chunk
-        self.sched = Scheduler(scheduler or SchedulerConfig())
+        self.sched = Scheduler(scheduler or SchedulerConfig(),
+                               metrics=self.metrics)
         self.rows: List[Optional[Request]] = [None] * rows
         self._row_seq = [0] * rows      # admission order, for preemption
         self._seq = 0
@@ -273,38 +292,28 @@ class Engine:
         self._tokens = np.zeros((rows, 1), np.int32)
         self._prefill = jax.jit(model.prefill)
         self._prefilling: Dict[int, _Prefill] = {}
-        self._n_preempt = 0
         # fused sampler: per-row SamplingParams state + ONE jitted
         # dispatch per decode tick (a second B=1 specialization serves
-        # prefill completions)
+        # prefill completions); the specialization menu and its
+        # observability live in sampling.FusedSampler
         vocab = model.cfg.vocab_size
-        self._logprob_k = int(min(max_logprobs, vocab))
-        self._sampler_state = sampling_lib.SamplerState(rows, vocab)
-        # specializations keyed by (logprob width, any-sampled-row,
-        # any-truncated-row): the engine dispatches the k=0 variant
-        # (no per-tick top-K) unless some bound row asked for logprobs,
-        # the with_sampling=False variant (argmax only — no Gumbel
-        # field) when every bound row is greedy, the
-        # with_truncation=False variant (no top-k/top-p/min-p sorts)
-        # for temperature-only batches, and omits the penalty masks
-        # from the input dict (statically, by key) when no bound row
-        # uses penalties — sparing the (rows, vocab) host->device
-        # transfer on default traffic.  A bounded menu of compiled
-        # variants, all bitwise token-identical (greedy rows take
-        # argmax in every variant; disabled knobs are exact no-ops).
-        # (trunc only matters when samp; the samp=False entries for
-        # trunc=True just alias the same compiled program shape)
-        self._sample_fused = {
-            (k, samp, trunc): jax.jit(functools.partial(
-                sampling_lib.sample_tokens, logprob_k=k,
-                with_sampling=samp, with_truncation=trunc))
-            for k in {0, self._logprob_k}
-            for samp in (False, True) for trunc in (False, True)}
+        self._sampler = sampling_lib.FusedSampler(
+            rows, vocab, max_logprobs, metrics=self.metrics,
+            tracer=self.tracer)
+        self._sampler_state = self._sampler.state
+        self._logprob_k = self._sampler.logprob_k
         self._auto_seeds = np.random.default_rng(seed)
-        self._sampler_time = 0.0
-        self._dispatch_counts = {"prefill": 0, "decode": 0}
-        self._finish_counts = {r: 0 for r in FINISH_REASONS}
-        self._n_ticks = 0
+        # engine.* counters (registry-backed; stats() is the compat view)
+        self._counts = self.metrics.group("engine", keys=(
+            "ticks", "tokens", "done", "failed", "preemptions"))
+        self._finish_counts = self.metrics.group("engine.finish",
+                                                 keys=FINISH_REASONS)
+        self._h_ttft = self.metrics.histogram("engine.ttft_s")
+        self._h_qwait = self.metrics.histogram("engine.queue_wait_s")
+        self._h_tick = self.metrics.histogram("engine.decode_tick_s")
+        self._h_chunk = self.metrics.histogram("engine.prefill_chunk_s")
+        self._leak_anomalies = self.metrics.counter("kv.leak_anomalies")
+        self.last_leak_error: Optional[str] = None
 
         if self.paged:
             # page-aligned max_len keeps every prefill page copy in
@@ -314,7 +323,10 @@ class Engine:
             if num_pages is None:
                 num_pages = rows * maxp + 1          # +1: trash page
             self.kv = PagedKVCache(num_pages, page_size, rows, maxp,
-                                   prefix_cache=prefix_cache)
+                                   prefix_cache=prefix_cache,
+                                   metrics=self.metrics)
+            self._g_pages_used = self.metrics.gauge("kv.pages_in_use")
+            self._g_pages_free = self.metrics.gauge("kv.pages_free")
             self.pages = model.init_paged_cache(num_pages, page_size)
             self._prefill_cache = model.init_cache(1, self.max_len)
             # donate the page pools: without donation the functional
@@ -393,10 +405,12 @@ class Engine:
                 + sp.max_tokens
             if not self.kv.fits_ever(total):
                 req.status = "rejected"
+                self._counts["failed"] += 1
                 self._failed.append(req)
                 return RequestHandle(self, req, accepted=False)
         if not self.sched.submit(req, time.time()):
             req.status = "rejected"
+            self._counts["failed"] += 1
             self._failed.append(req)
             return RequestHandle(self, req, accepted=False)
         if req.seed_used is None:
@@ -405,6 +419,11 @@ class Engine:
             req.seed_used = int(sp.seed) if sp.seed is not None \
                 else int(self._auto_seeds.integers(0, 2 ** 31 - 1))
         req.status = "queued"
+        if self.tracer.enabled:
+            self.tracer.track(REQUEST_PID, req.uid, f"req {req.uid}")
+            self.tracer.begin(REQUEST_PID, req.uid, "request",
+                              prompt_len=len(req.prompt))
+            self.tracer.begin(REQUEST_PID, req.uid, "queued")
         return RequestHandle(self, req, accepted=True)
 
     def _free_rows(self) -> List[int]:
@@ -506,10 +525,21 @@ class Engine:
         self._seq += 1
         self._row_seq[row] = self._seq
         req.status = "prefilling"
-        if req.first_admit_time is None:
-            req.first_admit_time = now
+        self._note_admitted(req, now, hit_tokens=hit)
         self._advance_prefill(row)
         return True
+
+    def _note_admitted(self, req: Request, now: float, *,
+                       hit_tokens: int = 0) -> None:
+        """Admission observability: close the request's ``queued`` span
+        and, on FIRST admission, record the queue wait."""
+        if self.tracer.enabled:
+            self.tracer.end(REQUEST_PID, req.uid, "queued",
+                            hit_tokens=hit_tokens)
+        if req.first_admit_time is None:
+            req.first_admit_time = now
+            self._h_qwait.observe(
+                max(now - (req.submit_time or now), 0.0))
 
     def _chunk_shape(self, pos: int, c: int):
         """Compile shape for a chunk of c tokens at cached position pos:
@@ -546,6 +576,9 @@ class Engine:
         first token and hand the row to decode."""
         st = self._prefilling[row]
         req = st.req
+        t0 = time.perf_counter()
+        tr0 = self.tracer.now()
+        pos0 = st.pos
         remaining = len(st.feed) - (st.pos if st.chunkable else 0)
         c = remaining if (self.prefill_chunk is None or not st.chunkable) \
             else min(self.prefill_chunk, remaining)
@@ -582,6 +615,10 @@ class Engine:
         self.pages = self._page_copy(self.pages, c1["k"], c1["v"],
                                      jnp.asarray(wpids))
         st.pos = new_pos
+        self._h_chunk.observe(time.perf_counter() - t0)
+        if self.tracer.enabled:
+            self.tracer.complete(REQUEST_PID, req.uid, "prefill_chunk",
+                                 tr0, start=pos0, end=st.pos)
         if st.pos < st.target:
             return
         # prefill complete: publish the feed's full pages for reuse (the
@@ -596,8 +633,16 @@ class Engine:
         res = self._run_sampler(logits[:, -1], slice(row, row + 1),
                                 "prefill")
         self._commit_token(row, req, res, 0)
+        self._note_first_token(req)
+
+    def _note_first_token(self, req: Request) -> None:
         if req.first_token_time is None:
             req.first_token_time = time.time()
+            self._h_ttft.observe(max(
+                req.first_token_time
+                - (req.submit_time or req.first_token_time), 0.0))
+            if self.tracer.enabled:
+                self.tracer.instant(REQUEST_PID, req.uid, "first_token")
 
     def _prefill_into_dense(self, row: int, req: Request,
                             now: float) -> None:
@@ -630,37 +675,20 @@ class Engine:
         self._seq += 1
         self._row_seq[row] = self._seq
         req.status = "running"
-        if req.first_admit_time is None:
-            req.first_admit_time = now
+        self._note_admitted(req, now)
         res = self._run_sampler(logits[:, -1], slice(row, row + 1),
                                 "prefill")
         self._commit_token(row, req, res, 0)
-        if req.first_token_time is None:
-            req.first_token_time = time.time()
+        self._note_first_token(req)
 
     def _run_sampler(self, logits, sl: slice, kind: str
                      ) -> Dict[str, np.ndarray]:
         """One fused sampler dispatch over the row slice ``sl`` of the
         sampler state (full batch for decode ticks, the single admitted
-        row for a prefill completion).  The per-row SamplingParams
-        arrays ride into the same jitted program no matter how the
-        batch mixes greedy/sampled/penalized rows."""
-        # sync the model's (async-dispatched) logits BEFORE the clock
-        # starts, so sampler_time_s measures the sampler, not the
-        # decode forward pass it would otherwise absorb
-        logits = jax.block_until_ready(jnp.asarray(logits, jnp.float32))
-        t0 = time.perf_counter()
-        st = self._sampler_state
-        masks = bool(st.uses_penalties[sl].any())
-        k = self._logprob_k if st.wants_logprobs[sl].any() else 0
-        samp = bool(st.is_sampled[sl].any())
-        trunc = samp and bool(st.uses_truncation[sl].any())
-        out = self._sample_fused[k, samp, trunc](
-            logits, st.batch(sl, with_masks=masks))
-        res = {k2: np.asarray(v) for k2, v in out.items()}
-        self._sampler_time += time.perf_counter() - t0
-        self._dispatch_counts[kind] += 1
-        return res
+        row for a prefill completion).  Thin delegate to
+        `sampling.FusedSampler.run` — kept as a method so tests can
+        subclass/spy on the engine's dispatch boundary."""
+        return self._sampler.run(logits, sl, kind)
 
     def _commit_token(self, row: int, req: Request,
                       res: Dict[str, np.ndarray], j: int) -> None:
@@ -669,6 +697,7 @@ class Engine:
         counter / penalty masks, and the next decode feed."""
         tok = int(res["token"][j])
         lp = float(res["logprob"][j])
+        self._counts["tokens"] += 1
         req.tokens.append(tok)
         req.token_logprobs.append(lp)
         req.cumulative_logprob += lp
@@ -712,7 +741,11 @@ class Engine:
         self._sampler_state.clear(row)
         req.status = "preempted"
         req.preemptions += 1
-        self._n_preempt += 1
+        self._counts["preemptions"] += 1
+        if self.tracer.enabled:
+            self.tracer.instant(REQUEST_PID, req.uid, "preempt",
+                                tokens=len(req.tokens or ()))
+            self.tracer.begin(REQUEST_PID, req.uid, "queued")
         self.sched.requeue(req)
 
     def _finish(self, row: int, truncated: bool = False,
@@ -729,8 +762,12 @@ class Engine:
         req.truncated = truncated
         req.status = "done"
         req.finish_reason = reason
+        self._counts["done"] += 1
         self._finish_counts[reason] += 1
         req.finish_time = time.time()
+        if self.tracer.enabled:
+            self.tracer.end(REQUEST_PID, req.uid, "request",
+                            finish=reason, tokens=len(req.tokens or ()))
         self._done.append(req)
 
     def _ensure_room(self, active: List[int]) -> List[int]:
@@ -740,9 +777,15 @@ class Engine:
         for i in list(active):
             if self.rows[i] is None:        # preempted by an earlier row
                 continue
+            n0 = len(self.kv.pending_copies)
             while True:
                 st = self.kv.ensure_decode_room(i)
                 if st == "ok":
+                    if self.tracer.enabled:
+                        for src, dst in self.kv.pending_copies[n0:]:
+                            self.tracer.instant(
+                                REQUEST_PID, self.rows[i].uid, "cow_copy",
+                                src=src, dst=dst)
                     break
                 if st == "full":            # max_len hit: force-retire
                     self._finish(i, truncated=True, reason=FINISH_LENGTH)
@@ -769,11 +812,27 @@ class Engine:
     def step(self) -> int:
         """One engine tick: expire, admit/advance prefills, decode all
         running rows, retire.  Returns the number of rows decoded."""
-        self._n_ticks += 1
+        self._counts["ticks"] += 1
+        tick_tr0 = self.tracer.now()
+        decoded = self._step_inner()
+        if self.paged:
+            self._g_pages_used.set(self.kv.alloc.num_used)
+            self._g_pages_free.set(self.kv.alloc.num_free)
+        if self.tracer.enabled:
+            self.tracer.complete(ENGINE_PID, 0, "tick", tick_tr0,
+                                 decoded=decoded)
+        return decoded
+
+    def _step_inner(self) -> int:
         now = time.time()
         for r in self.sched.expire(now):
             r.status = "expired"       # scheduler set finish_reason
+            self._counts["failed"] += 1
             self._finish_counts[FINISH_DEADLINE] += 1
+            if self.tracer.enabled:
+                self.tracer.end(REQUEST_PID, r.uid, "queued")
+                self.tracer.end(REQUEST_PID, r.uid, "request",
+                                finish=FINISH_DEADLINE)
             self._failed.append(r)
         chunks = self._admit(now)
         # retire BEFORE decoding: a prefill that already satisfied the
@@ -804,6 +863,8 @@ class Engine:
                 for i in self._prefilling:
                     table[i, :] = TRASH_PAGE
                     lengths[i] = 0
+            t_dec = time.perf_counter()
+            dec_tr0 = self.tracer.now()
             logits, self.pages = self._decode_paged(
                 self.params, jnp.asarray(self._tokens), self.pages,
                 jnp.asarray(table), jnp.asarray(lengths))
@@ -815,11 +876,19 @@ class Engine:
                 self.kv.advance(i)
                 self._commit_token(i, self.rows[i], res, i)
         else:
+            t_dec = time.perf_counter()
+            dec_tr0 = self.tracer.now()
             logits, self.cache = self._decode(
                 self.params, jnp.asarray(self._tokens), self.cache)
             res = self._run_sampler(logits[:, -1], slice(None), "decode")
             for i in active:
                 self._commit_token(i, self.rows[i], res, i)
+        self._h_tick.observe(time.perf_counter() - t_dec)
+        if self.tracer.enabled:
+            for i in active:
+                self.tracer.complete(REQUEST_PID, self.rows[i].uid,
+                                     "decode_tick", dec_tr0,
+                                     token=int(self._tokens[i, 0]))
         self._retire()
         self.sched.account(chunks, len(active))
         return len(active)
@@ -863,6 +932,29 @@ class Engine:
         """Requests refused (backpressure) or expired (deadline)."""
         return list(self._failed)
 
+    @property
+    def _n_preempt(self) -> int:
+        """Legacy alias for the ``engine.preemptions`` counter."""
+        return int(self._counts["preemptions"])
+
+    @property
+    def _n_ticks(self) -> int:
+        """Legacy alias for the ``engine.ticks`` counter."""
+        return int(self._counts["ticks"])
+
+    def shutdown(self) -> None:
+        """Final bookkeeping audit.  With ``debug_leak_check`` on a
+        paged engine, runs the cache's refcount/leak audit over the
+        now-idle pool; anomalies increment ``kv.leak_anomalies`` and
+        the message lands in ``last_leak_error`` instead of raising
+        (shutdown paths should report, not crash)."""
+        if self.paged and self.debug_leak_check:
+            try:
+                self.kv.leak_check()
+            except AssertionError as e:
+                self._leak_anomalies.inc()
+                self.last_leak_error = str(e)
+
     def stats(self) -> Dict[str, Any]:
         lat = [r.finish_time - r.submit_time for r in self._done
                if r.finish_time and r.submit_time]
@@ -880,8 +972,8 @@ class Engine:
             # (decode: exactly one dispatch per decoding tick, however
             # many distinct SamplingParams share the batch)
             "finish_reasons": dict(self._finish_counts),
-            "sampler_dispatches": dict(self._dispatch_counts),
-            "sampler_time_s": round(self._sampler_time, 6),
+            "sampler_dispatches": dict(self._sampler.dispatches),
+            "sampler_time_s": round(self._sampler.time_s, 6),
         }
         if lat:
             out["latency_p50_s"] = float(np.percentile(lat, 50))

@@ -49,6 +49,8 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+
 TRASH_PAGE = 0
 
 
@@ -150,13 +152,17 @@ class PrefixIndex:
     the allocator runs dry.
     """
 
-    def __init__(self, page_size: int, alloc: PageAllocator):
+    def __init__(self, page_size: int, alloc: PageAllocator,
+                 metrics: Optional[MetricsRegistry] = None):
         self.ps = page_size
         self.alloc = alloc
         self.root = _TrieNode((), None, None)
         self._clock = 0
-        self.stats = {"hit_tokens": 0, "miss_tokens": 0,
-                      "indexed_pages": 0, "evictions": 0}
+        m = metrics if metrics is not None else MetricsRegistry()
+        # live view into the registry (prefix.* metrics); short keys
+        # preserved for existing readers
+        self.stats = m.group("prefix", keys=(
+            "hit_tokens", "miss_tokens", "indexed_pages", "evictions"))
 
     # ------------------------------------------------------------------
     def _tick(self) -> int:
@@ -334,7 +340,8 @@ class PagedKVCache:
     """
 
     def __init__(self, num_pages: int, page_size: int, rows: int,
-                 max_pages_per_seq: int, prefix_cache: bool = False):
+                 max_pages_per_seq: int, prefix_cache: bool = False,
+                 metrics: Optional[MetricsRegistry] = None):
         self.page_size = page_size
         self.rows = rows
         self.maxp = max_pages_per_seq
@@ -343,12 +350,16 @@ class PagedKVCache:
         self.lengths = np.zeros((rows,), np.int32)
         self.row_pages: Dict[int, List[int]] = {}
         self.row_meta: Dict[int, RowMeta] = {}
-        self.prefix = PrefixIndex(page_size, self.alloc) if prefix_cache \
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.prefix = PrefixIndex(page_size, self.alloc,
+                                  metrics=self.metrics) if prefix_cache \
             else None
         # device page copies the engine must perform before the next
         # write to the pool (copy-on-write sources -> private targets)
         self.pending_copies: List[Tuple[int, int]] = []
-        self.stats = {"pages_fresh": 0, "pages_shared": 0, "cow_copies": 0}
+        # kv.* registry counters behind the legacy short-key dict view
+        self.stats = self.metrics.group("kv", keys=(
+            "pages_fresh", "pages_shared", "cow_copies"))
 
     # ------------------------------------------------------------------
     @property

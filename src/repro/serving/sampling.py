@@ -34,9 +34,17 @@ in order:
 vectors plus (rows, vocab) boolean seen-masks, rebound on admission
 (deterministically reconstructed from prompt+tokens, so preemption
 rebinds to the identical state) and advanced per committed token.
+`FusedSampler` owns the dispatch surface the engine drives: the state,
+the bounded menu of jitted specializations, and the sampler's
+observability — dispatch counters (``sampler.dispatches.*``) and a
+dispatch-latency histogram (``sampler.dispatch_s``) published into the
+engine's metrics registry (`repro.obs.metrics`), with per-dispatch
+trace slices on the engine track when tracing is enabled.
 """
 from __future__ import annotations
 
+import functools
+import time
 from typing import Dict, List, Optional
 
 import jax
@@ -44,6 +52,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.topk import NEG, topk_mask
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import ENGINE_PID, Tracer
 
 # Fixed base key for the per-request counter streams; per-row keys are
 # fold_in(fold_in(_BASE, seed), position).  Changing this constant
@@ -255,6 +265,72 @@ class SamplerState:
             out["seen"] = self.seen[sl]
             out["out_seen"] = self.out_seen[sl]
         return out
+
+
+class FusedSampler:
+    """The engine-facing fused-sampler dispatch surface.
+
+    Holds the per-row `SamplerState`, the bounded menu of compiled
+    `sample_tokens` specializations keyed by (logprob width,
+    any-sampled-row, any-truncated-row), and the sampler's metrics:
+    the engine dispatches the k=0 variant (no per-tick top-K) unless
+    some bound row asked for logprobs, the ``with_sampling=False``
+    variant (argmax only — no Gumbel field) when every bound row is
+    greedy, the ``with_truncation=False`` variant (no top-k/top-p/min-p
+    sorts) for temperature-only batches, and omits the penalty masks
+    from the input dict (statically, by key) when no bound row uses
+    penalties — sparing the (rows, vocab) host->device transfer on
+    default traffic.  All variants are bitwise token-identical (greedy
+    rows take argmax in every variant; disabled knobs are exact
+    no-ops).  (trunc only matters when samp; the samp=False entries for
+    trunc=True just alias the same compiled program shape.)
+    """
+
+    def __init__(self, rows: int, vocab: int, logprob_k: int = 8, *,
+                 metrics: Optional[MetricsRegistry] = None,
+                 tracer: Optional[Tracer] = None):
+        m = metrics if metrics is not None else MetricsRegistry()
+        self.state = SamplerState(rows, vocab)
+        self.logprob_k = int(min(logprob_k, vocab))
+        self.tracer = tracer if tracer is not None else Tracer(enabled=False)
+        self._fns = {
+            (k, samp, trunc): jax.jit(functools.partial(
+                sample_tokens, logprob_k=k,
+                with_sampling=samp, with_truncation=trunc))
+            for k in {0, self.logprob_k}
+            for samp in (False, True) for trunc in (False, True)}
+        self.dispatches = m.group("sampler.dispatches",
+                                  keys=("prefill", "decode"))
+        self._h_dispatch = m.histogram("sampler.dispatch_s")
+
+    @property
+    def time_s(self) -> float:
+        """Cumulative seconds spent inside sampler dispatches."""
+        return self._h_dispatch.total
+
+    def run(self, logits, sl: slice, kind: str) -> Dict[str, np.ndarray]:
+        """One fused dispatch over the row slice ``sl`` of the state
+        (full batch for decode ticks, the single admitted row for a
+        prefill completion)."""
+        # sync the model's (async-dispatched) logits BEFORE the clock
+        # starts, so sampler.dispatch_s measures the sampler, not the
+        # decode forward pass it would otherwise absorb
+        logits = jax.block_until_ready(jnp.asarray(logits, jnp.float32))
+        t0 = time.perf_counter()
+        tr0 = self.tracer.now()
+        st = self.state
+        masks = bool(st.uses_penalties[sl].any())
+        k = self.logprob_k if st.wants_logprobs[sl].any() else 0
+        samp = bool(st.is_sampled[sl].any())
+        trunc = samp and bool(st.uses_truncation[sl].any())
+        out = self._fns[k, samp, trunc](
+            logits, st.batch(sl, with_masks=masks))
+        res = {k2: np.asarray(v) for k2, v in out.items()}
+        self._h_dispatch.observe(time.perf_counter() - t0)
+        self.dispatches[kind] += 1
+        if self.tracer.enabled:
+            self.tracer.complete(ENGINE_PID, 0, f"sampler:{kind}", tr0)
+        return res
 
 
 def match_stop(tokens: List[int], stop) -> bool:

@@ -24,6 +24,10 @@ and how many rows decoded, and ``snapshot`` exposes the tick split
 (prefill-only / decode-only / interleaved) plus queue-event counters —
 the observability surface for tuning ``max_prefills_per_tick`` and
 ``prefill_chunk`` against head-of-line blocking.
+
+All counters publish into a metrics registry (`repro.obs.metrics`)
+under ``sched.*`` — ``self.counters`` is a live dict-view over it, so
+pre-registry call sites and tests keep their short names.
 """
 from __future__ import annotations
 
@@ -31,9 +35,14 @@ import dataclasses
 from collections import deque
 from typing import Callable, Dict, List, Optional
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serving.api import FINISH_DEADLINE
 
 POLICIES = ("fifo", "priority")
+
+_COUNTERS = ("submitted", "queue_rejected", "requeued", "queue_expired",
+             "admitted", "prefill_chunks", "decoded_tokens",
+             "prefill_ticks", "decode_ticks", "interleaved_ticks")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,15 +60,13 @@ class SchedulerConfig:
 
 
 class Scheduler:
-    def __init__(self, cfg: SchedulerConfig = SchedulerConfig()):
+    def __init__(self, cfg: SchedulerConfig = SchedulerConfig(),
+                 metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
         self._classes: Dict[int, deque] = {}
-        self.counters: Dict[str, int] = {
-            "submitted": 0, "queue_rejected": 0, "requeued": 0,
-            "queue_expired": 0, "admitted": 0,
-            "prefill_chunks": 0, "decoded_tokens": 0,
-            "prefill_ticks": 0, "decode_ticks": 0, "interleaved_ticks": 0,
-        }
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.counters = self.metrics.group("sched", keys=_COUNTERS)
+        self._depth = self.metrics.gauge("sched.queue_depth")
 
     def __len__(self) -> int:
         return sum(len(q) for q in self._classes.values())
@@ -144,9 +151,11 @@ class Scheduler:
             self.counters["prefill_ticks"] += 1
         elif decoded_rows:
             self.counters["decode_ticks"] += 1
+        self._depth.set(len(self))
 
     def snapshot(self) -> Dict[str, int]:
         """Counters + current depth, for Engine.stats()."""
+        self._depth.set(len(self))
         out = dict(self.counters)
         out["queue_depth"] = len(self)
         return out
