@@ -26,6 +26,12 @@ Two gate levels:
 - ``--level all`` (the advisory CI step) also enforces the PERF band,
   surfacing genuine slowdowns as a non-blocking signal first.
 
+Asymmetry by design: a key *missing* from the fresh results is a
+failure (the bench shrank or broke), but a fresh-only key — a section
+the baseline predates, e.g. a newly added bench — only WARNS at every
+level.  Growing the bench never blocks the PR that grows it; the new
+keys start gating once the refreshed baseline is committed.
+
 Exit code 0 = within tolerance, 1 = regression, 2 = usage/IO error.
 
     PYTHONPATH=src python -m benchmarks.check_regression \
@@ -48,6 +54,7 @@ _EXACT_KEYS = {
     "sys_prompt_len", "tail_len", "prefill_chunk", "mix", "name",
     "hashed", "config", "tokens_match", "deterministic_rerun",
     "budget", "budget_target", "n_slots", "page_size",
+    "spec_k", "draft_policy",
 }
 # Deterministic-per-workload accounting: tight relative band.
 _TIGHT_KEYS = {
@@ -58,6 +65,8 @@ _TIGHT_KEYS = {
     "prefix.hit_tokens", "prefix.miss_tokens", "prefix.indexed_pages",
     "prefix.evictions", "kv.pages_shared", "kv.pages_fresh",
     "engine.tokens", "engine.done", "kv.leak_anomalies",
+    "accept_rate", "mean_accept_len", "draft_dispatches",
+    "verify_dispatches",
 }
 # Sections whose token streams are sampled / arrival-order dependent:
 # even "tokens" class keys degrade to PERF there (stop sequences fire

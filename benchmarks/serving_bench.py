@@ -25,7 +25,13 @@ sampler's one-dispatch-per-tick contract), reporting tok/s, per-tick
 sampler overhead, and the finish-reason split — plus a determinism
 cross-check (a rerun with the same seeds must reproduce every token).
 
-A fourth section measures **observability overhead**: the shared-prefix
+A fourth section benches **self-speculative decoding** on the hashed
+config: the same workload runs with and without a compression-ladder
+draft (`repro.serving.spec_decode`), reporting accept rate, tok/s for
+both arms, and a bitwise token-identity cross-check (speculation must
+never change what the engine emits).
+
+A fifth section measures **observability overhead**: the shared-prefix
 workload with the span tracer off vs on, reporting the throughput
 delta and a bitwise token-identity cross-check (tracing must never
 change what the engine emits).  ``--trace-out`` exports the traced
@@ -297,6 +303,92 @@ def bench_mixed_sampling(model, params, cfg, *, concurrency: int,
     return row
 
 
+def bench_spec_decode(model, params, cfg, *, concurrency: int,
+                      requests: int, max_new: int, max_len: int,
+                      page_size: int, spec_k: int,
+                      draft_policy: str) -> dict:
+    """Self-speculative decoding: spec on vs off, same workload.
+
+    The draft is the compression-policy variant named by
+    ``draft_policy``, derived off the served params (shared hash seeds;
+    at the config's own ratio the banks alias by reference, so the
+    draft is the base and every proposal verifies — the deterministic
+    upper bound on accept rate).  Reports accept rate, tok/s both arms,
+    and a bitwise token-identity cross-check — speculation must never
+    change what the engine emits, only how fast it emits it.
+    """
+    from repro.serving.draft import build_draft
+    _, dmodel, dparams = build_draft(cfg, params, draft_policy)
+
+    rng = np.random.default_rng(4)
+    reqs_spec = []
+    for uid in range(requests):
+        plen = int(rng.integers(4, 20))
+        prompt = rng.integers(2, cfg.vocab_size,
+                              size=plen).astype(np.int32)
+        sp = SamplingParams(max_tokens=max_new) if uid % 3 else \
+            SamplingParams(temperature=0.8, top_p=0.9, top_k=64,
+                           max_tokens=max_new, seed=2000 + uid)
+        reqs_spec.append((prompt, sp))
+
+    def run(draft):
+        eng = Engine(model, params, max_concurrency=concurrency,
+                     max_len=max_len, eos_id=-1, page_size=page_size,
+                     draft=draft, spec_k=spec_k,
+                     scheduler=SchedulerConfig(max_queue=requests + 2))
+        # Steady-state measurement: the first pass over the workload
+        # pays every jit specialization its sampler mix and batch widths
+        # dispatch — and the spec arm has strictly more shapes to
+        # compile (propose/verify variants on top of the sampler
+        # blocks).  Warm with the *full* workload, then time a clean
+        # second pass, so neither arm is billed for compiles.
+        for uid, (prompt, sp) in enumerate(reqs_spec):
+            eng.submit(Request(uid=uid, prompt=prompt.copy(),
+                               sampling=sp))
+        eng.run()
+        eng._done.clear()
+        base = eng.metrics.snapshot()
+        t0 = time.time()
+        for uid, (prompt, sp) in enumerate(reqs_spec):
+            eng.submit(Request(uid=uid, prompt=prompt.copy(),
+                               sampling=sp))
+        done = eng.run()
+        wall = time.time() - t0
+        d = _workload_delta(eng, base)
+        toks = {r.uid: list(r.tokens) for r in done}
+        spec_stats = None
+        if eng.spec is not None:
+            # per-pass accept stats from the registry delta, not the
+            # decoder's lifetime counters (those include the warm pass)
+            spec_stats = {
+                "accept_rate": d["spec.accepted_drafts"]
+                / max(d["spec.proposed"], 1),
+                "mean_accept_len": d["spec.accept_len"]["mean"],
+                "draft_dispatches": d["spec.draft_dispatches"],
+                "verify_dispatches": d["spec.verify_dispatches"]}
+        return (round(d["engine.tokens"] / wall, 2), toks, spec_stats, d)
+
+    base_tps, toks_base, _, _ = run(None)
+    spec_tps, toks_spec, spec_stats, d = run((dmodel, dparams))
+    row = {"concurrency": concurrency, "requests": requests,
+           "max_new": max_new, "spec_k": spec_k,
+           "draft_policy": draft_policy,
+           "tokens_match": toks_base == toks_spec,
+           "baseline_tok_s": base_tps,
+           "spec_tok_s": spec_tps,
+           "speedup": round(spec_tps / base_tps, 3) if base_tps else 0.0,
+           "accept_rate": round(spec_stats["accept_rate"], 4),
+           "mean_accept_len": round(spec_stats["mean_accept_len"], 3),
+           "draft_dispatches": spec_stats["draft_dispatches"],
+           "verify_dispatches": spec_stats["verify_dispatches"]}
+    print(f"spec-decode @ c={concurrency} k={spec_k} "
+          f"draft={draft_policy}: {base_tps} -> {spec_tps} tok/s "
+          f"({row['speedup']}x), accept {row['accept_rate']:.2f} "
+          f"(mean len {row['mean_accept_len']:.2f}), "
+          f"match={row['tokens_match']}")
+    return row
+
+
 def bench_obs_overhead(model, params, cfg, *, concurrency: int,
                        users: int, sys_len: int, tail_len: int,
                        max_new: int, max_len: int, page_size: int,
@@ -369,11 +461,14 @@ def main(smoke: bool = False, out_json: str = "BENCH_serving.json",
     max_new = 8 if smoke else 24
     results = {"smoke": smoke, "levels": list(levels), "configs": []}
     dense = None                 # (model, params) reused for shared-prefix
+    hashed = None                # (model, params) reused for spec-decode
     for tag, cfg in _configs():
         model = build(cfg)
         params = model.init(jax.random.PRNGKey(0))
         if dense is None:
             dense = (model, params, cfg)
+        if cfg.hashed:
+            hashed = (model, params, cfg)
         rows = []
         for c in levels:
             r = bench_level(model, params, cfg, concurrency=c,
@@ -401,6 +496,18 @@ def main(smoke: bool = False, out_json: str = "BENCH_serving.json",
         model, params, cfg, concurrency=4,
         requests=6 if smoke else 18,
         max_new=6 if smoke else 20, max_len=128, page_size=16)
+    # self-speculative decoding on the hashed config: the draft is the
+    # policy ladder's own rung (equal ratio -> banks alias, proposals
+    # verify deterministically — the free-draft upper bound).  Low
+    # concurrency + decode-heavy requests is the regime speculation is
+    # for: each verified block replaces k+1 per-token dispatches, and
+    # at small batch the baseline has no batching to amortize against.
+    hmodel, hparams, hcfg = hashed
+    results["spec_decode"] = bench_spec_decode(
+        hmodel, hparams, hcfg, concurrency=2,
+        requests=6 if smoke else 18,
+        max_new=24, max_len=128, page_size=16,
+        spec_k=4, draft_policy="1/8")
     # observability overhead: tracer off vs on, same workload
     results["obs_overhead"] = bench_obs_overhead(
         model, params, cfg, concurrency=8,

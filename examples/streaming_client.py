@@ -19,8 +19,14 @@ With ``--trace-out FILE`` every request's lifecycle (queued wait,
 prefill chunks, decode ticks) is recorded and exported as Chrome
 trace-event JSON — open it at https://ui.perfetto.dev.
 
+With ``--spec-draft RATIO`` (e.g. ``1/8``) the engine decodes
+self-speculatively: a compressed draft derived off the same weights
+proposes ``--spec-k`` tokens per tick and the full model verifies them
+in one dispatch — the streams below are bitwise identical either way,
+and the exit line reports the measured accept rate.
+
     PYTHONPATH=src python examples/streaming_client.py \
-        [--trace-out stream_trace.json]
+        [--trace-out stream_trace.json] [--spec-draft 1/8 --spec-k 4]
 """
 import argparse
 
@@ -39,6 +45,12 @@ parser.add_argument("--hashed", action="store_true")
 parser.add_argument("--trace-out", default=None, metavar="FILE",
                     help="export per-request spans as Chrome "
                          "trace-event JSON (open in Perfetto)")
+parser.add_argument("--spec-draft", default=None, metavar="POLICY",
+                    help="self-speculative decoding: draft policy JSON "
+                         "or ratio ('1/8') derived off the served "
+                         "weights — output stays bitwise identical")
+parser.add_argument("--spec-k", type=int, default=4,
+                    help="draft proposal depth (with --spec-draft)")
 args = parser.parse_args()
 
 cfg = reduced(C.get(args.arch))
@@ -48,9 +60,16 @@ model = build(cfg)
 params = model.init(jax.random.PRNGKey(0))
 rng = np.random.default_rng(0)
 
+draft = None
+if args.spec_draft:
+    from repro.serving.draft import build_draft
+    _, dmodel, dparams = build_draft(cfg, params, args.spec_draft)
+    draft = (dmodel, dparams)
+
 tracer = Tracer(enabled=bool(args.trace_out))
 eng = Engine(model, params, max_concurrency=2, max_len=128, eos_id=-1,
-             prefix_cache=True, prefill_chunk=16, tracer=tracer)
+             prefix_cache=True, prefill_chunk=16, tracer=tracer,
+             draft=draft, spec_k=args.spec_k)
 
 # -- style 1: blocking iteration over one handle ---------------------------
 prompt = rng.integers(2, cfg.vocab_size, 12).astype(np.int32)
@@ -94,7 +113,12 @@ while eng.pending():
         for d in h.drain():
             print(f"  {tag:6s} += {d.new_token_ids}"
                   + (f"  [{d.finish_reason}]" if d.done else ""))
-print("finish reasons:", eng.stats()["finish_reasons"])
+stats = eng.stats()
+print("finish reasons:", stats["finish_reasons"])
+if "spec" in stats:
+    sp = stats["spec"]
+    print(f"spec decode: accept_rate={sp['accept_rate']:.3f} "
+          f"mean_accept_len={sp['mean_accept_len']:.2f} (k={sp['k']})")
 if args.trace_out:
     tracer.export(args.trace_out)
     print(f"trace -> {args.trace_out} (open at https://ui.perfetto.dev)")

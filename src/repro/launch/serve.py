@@ -92,6 +92,16 @@ def main() -> int:
                    help="prefill long prompts N tokens per tick, "
                         "interleaved with decode (default: monolithic "
                         "prefill; paged decoders only)")
+    p.add_argument("--spec-draft", default=None, metavar="POLICY",
+                   help="enable self-speculative decoding: a policy "
+                        "JSON path or compression ratio ('1/8') naming "
+                        "the draft variant derived off the served "
+                        "weights (same hash seeds; equal-ratio aliases "
+                        "by reference).  Output stays bitwise identical "
+                        "to non-speculative decode")
+    p.add_argument("--spec-k", type=int, default=4,
+                   help="draft proposal depth per tick (with "
+                        "--spec-draft)")
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--max-len", type=int, default=256)
     p.add_argument("--temperature", type=float, default=0.0,
@@ -182,6 +192,7 @@ def main() -> int:
         eng = Engine.from_artifact(
             args.artifact or args.model_name,
             registry_root=args.registry if args.model_name else None,
+            draft_policy=args.spec_draft, spec_k=args.spec_k,
             **engine_kwargs)
         cfg = eng.model.cfg
         print(f"cold start from artifact: {cfg.name} "
@@ -214,7 +225,13 @@ def main() -> int:
                 args.ckpt_dir, {"params": params, "opt": None, "step": 0})
             params = state["params"]
             print(f"loaded params from {args.ckpt_dir}")
-        eng = Engine(model, params, **engine_kwargs)
+        draft = None
+        if args.spec_draft:
+            from repro.serving.draft import build_draft
+            _, dmodel, dparams = build_draft(cfg, params, args.spec_draft)
+            draft = (dmodel, dparams)
+        eng = Engine(model, params, draft=draft, spec_k=args.spec_k,
+                     **engine_kwargs)
 
     stop = tuple(tuple(int(t) for t in s.split(","))
                  for s in (args.stop or ()))
@@ -272,6 +289,12 @@ def main() -> int:
           f"sampler dispatches: {stats['sampler_dispatches']} "
           f"({stats['sampler_time_s']:.3f}s in sampler over "
           f"{stats['ticks']} ticks)")
+    if "spec" in stats:
+        sp = stats["spec"]
+        print(f"spec decode: accept_rate={sp['accept_rate']:.3f} "
+              f"mean_accept_len={sp['mean_accept_len']:.2f} "
+              f"(k={sp['k']}, {sp['draft_dispatches']} draft / "
+              f"{sp['verify_dispatches']} verify dispatches)")
     summary = {"requests": len(done), "tokens": total_tokens,
                "wall_s": round(dt, 2),
                "tok_per_s": round(total_tokens / dt, 1)}

@@ -54,6 +54,12 @@ class Model(NamedTuple):
     #                lengths(B,), impl) -> (logits, pages)
     init_paged_cache: Optional[Callable] = None
     decode_paged: Optional[Callable] = None
+    # decode_paged_block: (params, tokens(B,S), pages, page_table,
+    #                      lengths(B,), counts(B,), impl) -> (logits, pages)
+    # multi-token decode for speculative propose/verify; None for model
+    # kinds where a wider batch is not bitwise row-equivalent (MoE
+    # capacity routing mixes rows).
+    decode_paged_block: Optional[Callable] = None
 
 
 # ---------------------------------------------------------------------------
@@ -542,6 +548,38 @@ def _build_decoder(cfg: ArchConfig) -> Model:
             body, x, (params["layers"], is_global, pages["k"], pages["v"]))
         return logits_fn(params, x), {"k": nk, "v": nv}
 
+    def decode_paged_block(params, tokens, pages, page_table, lengths,
+                           counts, impl="ref"):
+        """Multi-token paged decode for speculative propose/verify.
+
+        tokens (B, S); slot s of row b is the token at position
+        ``lengths[b] + s``, real iff ``s < counts[b]`` (padding slots
+        write trash-page K/V and produce garbage logits the caller
+        ignores).  Per-row compute is bitwise-identical to S successive
+        ``decode_paged`` steps — every sublayer is row-wise (GEMMs,
+        norms, elementwise) and the attention masks match, the same
+        invariance the chunked-prefill parity pin rests on.
+        """
+        x = L.embedding_lookup(emb_plan, params["embed"], tokens)
+        x = shd.constraint(x, P(L.BATCH, None, None))
+
+        def body(x, xs):
+            lp, glob, pk, pv = xs
+            h = norm_apply(lp["ln1"], x)
+            a, (nk, nv) = ATT.apply_paged_block(
+                attn_plan, lp["attn"], h, pages=(pk, pv),
+                page_table=page_table, lengths=lengths, counts=counts,
+                is_global=glob, impl=impl)
+            x = x + a
+            h = norm_apply(lp["ln2"], x)
+            f = FFN.apply(ffn_plan, lp["ffn"], h)
+            x = shd.constraint(x + f, P(L.BATCH, None, None))
+            return x, (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], is_global, pages["k"], pages["v"]))
+        return logits_fn(params, x), {"k": nk, "v": nv}
+
     def pspecs():
         cell = []
         jax.eval_shape(lambda k: build_params(k, cell),
@@ -551,7 +589,10 @@ def _build_decoder(cfg: ArchConfig) -> Model:
     return Model(cfg, lambda key: build_params(key), pspecs, train_loss,
                  prefill, decode_step, init_cache, cache_pspecs,
                  init_paged_cache=init_paged_cache,
-                 decode_paged=decode_paged)
+                 decode_paged=decode_paged,
+                 # MoE capacity routing is batch-shape dependent, so a
+                 # wider block is not bitwise row-equal there
+                 decode_paged_block=None if use_moe else decode_paged_block)
 
 
 # ===========================================================================

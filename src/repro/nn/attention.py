@@ -294,6 +294,76 @@ def apply_paged(plan: AttentionPlan, params, x, *, pages, page_table,
     return L.linear_apply(o_lin, params["o"], out), (pk, pv)
 
 
+def apply_paged_block(plan: AttentionPlan, params, x, *, pages, page_table,
+                      lengths, counts, is_global=None, impl: str = "ref"):
+    """Multi-token decode block (speculative propose/verify) through a
+    paged KV cache.
+
+    x: (B, S, d_model); slot ``s`` of row ``b`` holds the token at
+    absolute position ``lengths[b] + s`` and is real iff
+    ``s < counts[b]``.  Real slots write K/V into the row's pages (slot
+    s attends to slots < s written in the same call); padding slots
+    write the trash page (0), whose contents are never read back — the
+    page-table mask ``kv_pos < lengths`` already excludes every
+    table slot that maps to it.  With S == 1 (counts all 1) the
+    projections, RoPE positions, KV scatter targets, and attention
+    masks are identical to :func:`apply_paged`, so the block path is
+    bitwise-equal to the per-token path — the parity the speculative
+    engine's token-identity guarantee rests on.
+
+    Returns (out (B, S, d_model), (new_pk, new_pv)).
+    """
+    from repro.kernels import paged_attention as PA
+    from repro.kernels import ref as KREF
+
+    b, s_blk, _ = x.shape
+    q = _project(plan, params, "q", x, plan.num_heads)
+    k = _project(plan, params, "k", x, plan.num_kv_heads)
+    v = _project(plan, params, "v", x, plan.num_kv_heads)
+    if plan.qk_norm:
+        q = L.rmsnorm_apply(params["q_norm"], q)
+        k = L.rmsnorm_apply(params["k_norm"], k)
+    offs = jnp.arange(s_blk, dtype=jnp.int32)[None, :]
+    positions = lengths[:, None] + offs               # (B, S)
+    if plan.use_rope:
+        q = L.rope(q, positions, plan.rope_theta)
+        k = L.rope(k, positions, plan.rope_theta)
+
+    pk, pv = pages
+    ps = pk.shape[1]
+    maxp = page_table.shape[1]
+    valid = offs < counts[:, None]                    # (B, S)
+    # clamp the page slot for padding positions that run past the
+    # table; their writes are redirected to the trash page anyway
+    pno = jnp.minimum(positions // ps, maxp - 1)
+    pidx = jnp.where(valid,
+                     jnp.take_along_axis(page_table, pno, axis=1), 0)
+    poff = positions % ps
+    pk = pk.at[pidx.reshape(-1), poff.reshape(-1)].set(
+        k.reshape(b * s_blk, *k.shape[2:]).astype(pk.dtype))
+    pv = pv.at[pidx.reshape(-1), poff.reshape(-1)].set(
+        v.reshape(b * s_blk, *v.shape[2:]).astype(pv.dtype))
+
+    if plan.sliding_window > 0:
+        window = jnp.asarray(plan.sliding_window, jnp.int32)
+        if is_global is not None:
+            window = jnp.where(is_global, 0, window)
+    else:
+        window = jnp.asarray(0, jnp.int32)
+
+    fn = PA.paged_decode_attention if impl == "pallas" \
+        else KREF.paged_attention_ref
+    outs = [fn(q[:, s], pk, pv, page_table,
+               jnp.minimum(lengths + s + 1, maxp * ps), window)
+            for s in range(s_blk)]
+    out = jnp.stack(outs, axis=1).reshape(b, s_blk, plan.q_dim)
+    out = out.astype(plan.dtype)
+
+    o_lin = _lin(plan, plan.q_dim, plan.d_model, plan.hash_o,
+                 (L.TP, L.FSDP))
+    return L.linear_apply(o_lin, params["o"], out), (pk, pv)
+
+
 def init_cache(plan: AttentionPlan, batch: int, max_len: int,
                dtype=jnp.bfloat16):
     shape = (batch, max_len, plan.num_kv_heads, plan.head_dim)

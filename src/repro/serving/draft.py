@@ -1,0 +1,162 @@
+"""Draft-model derivation for self-speculative decoding.
+
+HashedNets' hash functions are stateless and seeded per *slot*
+(``models.transformer._slot_seed`` keys on the slot name only), so the
+same served weights can be re-addressed at any compression ratio: a
+`CompressionPolicy` rung below the served one is a *free draft model*
+sharing the base artifact's seeds, layout, and tokenizer.
+
+The draft bank is derived from the served weights by least-squares
+projection onto the draft's weight-sharing pattern: with the draft's
+virtual matrix ``V_d[i,j] = xi_d(i,j) * w_d[h_d(i,j)]``, minimizing
+``||V_d - V||^2`` over ``w_d`` gives
+
+    w_d[b] = mean_{(i,j): h_d(i,j)=b}  xi_d(i,j) * V[i,j]
+
+i.e. a signed segment-mean of the served virtual matrix over the
+draft's buckets.  When a slot's draft spec EQUALS its base spec the
+bank is aliased by reference (zero copy, exact) — the degenerate top
+rung of the ladder.  Dense slots (norms, biases, routers, untouched
+projections) always alias.
+
+Nothing here depends on the engine; `serving.spec_decode` consumes the
+(model, params) pair this module builds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashed as H
+from repro.policy import rules as POL
+
+DraftSpec = Union[str, float, POL.CompressionPolicy]
+
+
+def resolve_draft_policy(spec: DraftSpec, base_cfg) -> POL.CompressionPolicy:
+    """Lower a CLI-ish draft spec into a CompressionPolicy.
+
+    Accepts a ready policy, a ratio (``0.0625`` / ``"1/16"``), or a path
+    to a policy JSON.  Ratio forms inherit the base config's effective
+    mode/panel/path defaults so the draft's bucket geometry lines up
+    with the served banks (same panels => same per-panel hash streams).
+    """
+    if isinstance(spec, POL.CompressionPolicy):
+        spec.validate()
+        return spec
+    if isinstance(spec, str) and (spec.endswith(".json")
+                                  or os.path.isfile(spec)):
+        return POL.load(spec)
+    ratio = POL.parse_ratio(spec) if isinstance(spec, str) else float(spec)
+    if not (0.0 < ratio <= 1.0):
+        raise ValueError(f"draft compression must be in (0, 1], got {ratio}")
+    if base_cfg.hashed:
+        base_pol = POL.effective(base_cfg)
+        return dataclasses.replace(base_pol, rules=(), budget=None,
+                                   compression=ratio)
+    return POL.CompressionPolicy(rules=(), compression=ratio)
+
+
+def _project_bank(v: jnp.ndarray, spec: H.HashedSpec) -> jnp.ndarray:
+    """Least-squares bank for one virtual matrix v (rows, cols), f32."""
+    if spec.mode == "element":
+        i = jnp.arange(spec.rows, dtype=jnp.int32)[:, None]
+        j = jnp.arange(spec.cols, dtype=jnp.int32)[None, :]
+        idx, sgn = H.element_indices(spec, i, j)
+        flat_idx = idx.reshape(-1)
+        num = jax.ops.segment_sum((v * sgn.astype(v.dtype)).reshape(-1),
+                                  flat_idx, num_segments=spec.num_buckets)
+        cnt = jax.ops.segment_sum(jnp.ones_like(flat_idx, v.dtype),
+                                  flat_idx, num_segments=spec.num_buckets)
+        return num / jnp.maximum(cnt, 1.0)
+    idx, sgn = H.block_indices(spec)                       # (gi, gj)
+    gi, gj = spec.tile_grid
+    bm, bn = spec.block_shape
+    vp = jnp.pad(v, ((0, gi * bm - spec.rows), (0, gj * bn - spec.cols)))
+    tiles = vp.reshape(gi, bm, gj, bn).transpose(0, 2, 1, 3)
+    tiles = tiles.reshape(gi * gj, bm, bn) \
+        * sgn.reshape(-1, 1, 1).astype(v.dtype)
+    flat_idx = idx.reshape(-1)
+    num = jax.ops.segment_sum(tiles, flat_idx,
+                              num_segments=spec.bank_tiles)
+    cnt = jax.ops.segment_sum(jnp.ones_like(flat_idx, v.dtype), flat_idx,
+                              num_segments=spec.bank_tiles)
+    return num / jnp.maximum(cnt, 1.0)[:, None, None]
+
+
+def _transform_leaf(base_leaf, base_spec, draft_spec, vshape, out_sd):
+    """base leaf -> draft leaf for one slot (handles layer stacking).
+
+    The per-layer result is either the draft bank or the dense virtual
+    matrix; the trailing reshape restores the model's exact leaf layout
+    (e.g. MoE expert-major splits of the flattened virtual rows).
+    """
+    def one(w):
+        v = (H.materialize(w, base_spec, dtype=jnp.float32)
+             if base_spec is not None
+             else w.reshape(vshape).astype(jnp.float32))
+        if draft_spec is not None:
+            return _project_bank(v, draft_spec)
+        return v
+    per_layer_ndim = (len(base_spec.real_param_shape())
+                      if base_spec is not None else len(vshape))
+    if base_leaf.ndim == per_layer_ndim + 1:      # stacked over layers
+        out = jax.lax.map(one, base_leaf)         # sequential: bounds memory
+    else:
+        out = one(base_leaf)
+    return out.reshape(out_sd.shape).astype(out_sd.dtype)
+
+
+def derive_draft_params(base_cfg, draft_cfg, draft_model, params):
+    """Build the draft model's param tree from the served weights.
+
+    Per leaf: alias when base/draft agree (dense==dense or identical
+    HashedSpec), else materialize the served virtual matrix and
+    project it onto the draft's bank (or leave it dense).  Aliased
+    leaves share device buffers with the base params — the draft costs
+    only its differing banks.
+    """
+    from repro.models import transformer as T
+
+    base_specs = T.bank_spec_map(base_cfg)
+    draft_specs = T.bank_spec_map(draft_cfg)
+    slots = {s.path: s for s in T.hash_slots(draft_cfg)}
+    shapes = jax.eval_shape(draft_model.init, jax.random.PRNGKey(0))
+
+    def fill(sub_sd, sub_params, path):
+        if isinstance(sub_sd, dict):
+            return {k: fill(sub_sd[k], sub_params[k], path + (k,))
+                    for k in sub_sd}
+        bspec, dspec = base_specs.get(path), draft_specs.get(path)
+        if bspec == dspec:                        # includes dense==dense
+            assert sub_params.shape == sub_sd.shape, path
+            return sub_params
+        slot = slots[path]
+        return _transform_leaf(sub_params, bspec, dspec,
+                               slot.virtual_shape, sub_sd)
+
+    return fill(shapes, params, ())
+
+
+def build_draft(base_cfg, params, draft_policy: DraftSpec,
+                ) -> Tuple[object, object, object]:
+    """(draft_cfg, draft_model, draft_params) for a served model.
+
+    The draft config is the base config re-pointed at the draft policy;
+    seeds are ratio-independent so every draft bank re-addresses the
+    same hash streams as the served banks.
+    """
+    from repro.models import build
+
+    policy = resolve_draft_policy(draft_policy, base_cfg)
+    draft_cfg = base_cfg.policy_variant(policy).with_(
+        name=f"{base_cfg.name}-draft")
+    draft_model = build(draft_cfg)
+    draft_params = derive_draft_params(base_cfg, draft_cfg, draft_model,
+                                       params)
+    return draft_cfg, draft_model, draft_params

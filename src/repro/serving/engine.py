@@ -231,7 +231,9 @@ class Engine:
                  max_logprobs: int = 8,
                  metrics: Optional[MetricsRegistry] = None,
                  tracer: Optional[Tracer] = None,
-                 debug_leak_check: bool = False):
+                 debug_leak_check: bool = False,
+                 draft: Optional[Tuple[Model, Any]] = None,
+                 spec_k: int = 4):
         """max_concurrency (alias: slots) fixes the decode batch width.
 
         Paged knobs (decoder kinds): ``page_size`` tokens per KV page;
@@ -260,6 +262,17 @@ class Engine:
         ``debug_leak_check`` (or env REPRO_DEBUG_LEAK_CHECK=1) makes
         ``shutdown()`` run the paged cache's refcount audit and export
         anomalies as the ``kv.leak_anomalies`` metric.
+
+        ``draft``: an optional ``(model, params)`` pair (typically from
+        `repro.serving.draft.build_draft` — a compressed policy variant
+        of the served model) enabling self-speculative decoding: the
+        draft proposes ``spec_k`` tokens per tick and the base model
+        verifies them in one batched dispatch (`repro.serving.
+        spec_decode`).  Emitted tokens are bitwise identical to the
+        non-speculative engine for every SamplingParams mix.  Requires
+        the paged backend on a decoder kind (MoE excluded: its
+        capacity routing is batch-shape dependent, so block-verify
+        parity doesn't hold).
         """
         self.model = model
         self.params = params
@@ -340,7 +353,21 @@ class Engine:
             self._page_copy = jax.jit(_copy_pages, donate_argnums=(0,))
             self._gather = jax.jit(_gather_prefix)
             self._cow_copy = jax.jit(_copy_page, donate_argnums=(0,))
+            self.spec = None
+            if draft is not None:
+                if model.decode_paged_block is None \
+                        or draft[0].decode_paged_block is None:
+                    raise ValueError(
+                        "speculative decoding needs decode_paged_block "
+                        "(decoder kind, non-MoE)")
+                from repro.serving.spec_decode import SpecDecoder
+                self.spec = SpecDecoder(self, draft[0], draft[1],
+                                        k=spec_k, attn_impl=attn_impl)
         else:
+            if draft is not None:
+                raise ValueError("speculative decoding requires the "
+                                 "paged backend (decoder kinds)")
+            self.spec = None
             self.max_len = max_len
             self.cache = model.init_cache(rows, max_len)
             # per-row write positions: every row decodes at its own index
@@ -357,7 +384,8 @@ class Engine:
     def from_artifact(cls, path_or_name: str, *,
                       registry_root: Optional[str] = None,
                       slots: int = 4, max_len: int = 512, eos_id: int = 1,
-                      seed: int = 0, **kwargs) -> "Engine":
+                      seed: int = 0, draft_policy=None,
+                      **kwargs) -> "Engine":
         """Cold-start an engine from a compressed model artifact.
 
         path_or_name: a .hnart file path, or (with registry_root) a
@@ -371,6 +399,14 @@ class Engine:
         & streaming surface (SamplingParams requests, RequestHandle
         deltas, seeded reproducibility) works identically on a
         cold-started artifact.
+
+        ``draft_policy`` switches on self-speculative decoding: a
+        `CompressionPolicy`, policy-JSON path, or ratio string ("1/16")
+        naming the compressed draft variant, derived off the SAME
+        loaded params (one mmap: equal-ratio banks alias by reference,
+        deeper rungs project through the shared hash seeds — see
+        `repro.serving.draft`).  ``spec_k`` (in kwargs) sets the
+        proposal depth.
         """
         from repro.artifact import io as artifact_io
         if registry_root is not None:
@@ -378,6 +414,11 @@ class Engine:
             entry = artifact_registry.resolve(registry_root, path_or_name)
             path_or_name = entry["path"]
         _, model, params = artifact_io.load_model(path_or_name)
+        if draft_policy is not None:
+            from repro.serving import draft as draft_lib
+            _, dmodel, dparams = draft_lib.build_draft(
+                model.cfg, params, draft_policy)
+            kwargs["draft"] = (dmodel, dparams)
         return cls(model, params, slots=slots, max_len=max_len,
                    eos_id=eos_id, seed=seed, **kwargs)
 
@@ -738,6 +779,8 @@ class Engine:
         self._prefilling.pop(row, None)
         self.rows[row] = None
         self.kv.release_row(row)
+        if self.spec is not None:
+            self.spec.release_row(row)
         self._sampler_state.clear(row)
         req.status = "preempted"
         req.preemptions += 1
@@ -755,6 +798,8 @@ class Engine:
             self._publish_row(row)
             self.rows[row] = None
             self.kv.release_row(row)
+            if self.spec is not None:
+                self.spec.release_row(row)
         else:
             self.rows[row] = None
         self._sampler_state.clear(row)
@@ -854,27 +899,35 @@ class Engine:
             if not active:
                 self.sched.account(chunks, 0)
                 return 0
-            table, lengths = self.kv.table, self.kv.lengths
-            if self._prefilling:
-                # rows mid-prefill must not write garbage K/V into their
-                # (real) pages, nor attend: point them at the trash page
-                table = table.copy()
-                lengths = lengths.copy()
-                for i in self._prefilling:
-                    table[i, :] = TRASH_PAGE
-                    lengths[i] = 0
             t_dec = time.perf_counter()
             dec_tr0 = self.tracer.now()
-            logits, self.pages = self._decode_paged(
-                self.params, jnp.asarray(self._tokens), self.pages,
-                jnp.asarray(table), jnp.asarray(lengths))
-            # ONE fused dispatch for the whole decode batch; inactive
-            # rows are sampled-and-discarded (the counter-based PRNG
-            # makes discarded draws side-effect free)
-            res = self._run_sampler(logits[:, -1], slice(None), "decode")
-            for i in active:
-                self.kv.advance(i)
-                self._commit_token(i, self.rows[i], res, i)
+            if self.spec is not None:
+                # speculative tick: draft-propose + block-verify commits
+                # 1..spec_k+1 tokens per row, bitwise what the baseline
+                # path below would have emitted (spec_decode)
+                self.spec.tick(active)
+            else:
+                table, lengths = self.kv.table, self.kv.lengths
+                if self._prefilling:
+                    # rows mid-prefill must not write garbage K/V into
+                    # their (real) pages, nor attend: point them at the
+                    # trash page
+                    table = table.copy()
+                    lengths = lengths.copy()
+                    for i in self._prefilling:
+                        table[i, :] = TRASH_PAGE
+                        lengths[i] = 0
+                logits, self.pages = self._decode_paged(
+                    self.params, jnp.asarray(self._tokens), self.pages,
+                    jnp.asarray(table), jnp.asarray(lengths))
+                # ONE fused dispatch for the whole decode batch;
+                # inactive rows are sampled-and-discarded (the counter-
+                # based PRNG makes discarded draws side-effect free)
+                res = self._run_sampler(logits[:, -1], slice(None),
+                                        "decode")
+                for i in active:
+                    self.kv.advance(i)
+                    self._commit_token(i, self.rows[i], res, i)
         else:
             t_dec = time.perf_counter()
             dec_tr0 = self.tracer.now()
@@ -951,6 +1004,8 @@ class Engine:
         if self.paged and self.debug_leak_check:
             try:
                 self.kv.leak_check()
+                if self.spec is not None:
+                    self.spec.leak_check()   # draft pool audits too
             except AssertionError as e:
                 self._leak_anomalies.inc()
                 self.last_leak_error = str(e)
@@ -986,6 +1041,8 @@ class Engine:
             out["pages_in_use"] = self.kv.alloc.num_used
             out["pages_free"] = self.kv.alloc.num_free
             out.update(self.kv.prefix_stats())
+            if self.spec is not None:
+                out["spec"] = self.spec.stats()
         return out
 
 

@@ -495,29 +495,40 @@ class PagedKVCache:
     # ------------------------------------------------------------------
     def ensure_decode_room(self, row: int) -> str:
         """Make position ``lengths[row]`` addressable AND writable (the
-        next token's k/v write).  Allocates at most one page for room
-        plus, when the target page is shared (refcount > 1), one more
+        next token's k/v write) — the single-token decode case of
+        :meth:`ensure_room`."""
+        return self.ensure_room(row, self.lengths[row] + 1)
+
+    def ensure_room(self, row: int, upto: int) -> str:
+        """Make positions ``lengths[row] .. upto-1`` addressable AND
+        writable (a k/v write block — speculative verify writes k+1
+        positions in one dispatch).  Allocates the page shortfall plus,
+        when the write-cursor page is shared (refcount > 1), one more
         for a private copy-on-write replacement — the device copy is
         queued on ``pending_copies`` for the engine to drain before the
-        write.  (The engine's admission discipline keeps shared pages
-        strictly behind the write cursor, so this COW branch is its
-        defense-in-depth backstop; the stateful refcount tests drive it
-        directly.)  Returns:
+        write.  Only the cursor page needs the COW check: sharers (the
+        prefix tree, sibling rows) only ever reference fully-cached
+        pages, all at or before the cursor, and pages past it are fresh
+        allocations or truncate-trimmed privates.  (The engine's
+        admission discipline keeps shared pages strictly behind the
+        write cursor, so the COW branch is its defense-in-depth
+        backstop; the stateful refcount tests drive it directly.)
+        Returns:
 
-        - "ok"   — position addressable and privately writable,
+        - "ok"   — every position addressable and privately writable,
         - "oom"  — pool exhausted (caller preempts a row and retries),
         - "full" — table width (max_len) hit (caller force-retires).
         """
-        need = self.lengths[row] // self.page_size + 1
+        need = self.pages_for(upto)
         pages = self.row_pages[row]
         if len(pages) < need:
             if need > self.maxp:
                 return "full"
-            got = self._alloc_or_evict(1)
+            got = self._alloc_or_evict(need - len(pages))
             if got is None:
                 return "oom"
+            self.table[row, len(pages):need] = got
             pages.extend(got)
-            self.table[row, len(pages) - 1] = got[0]
         j = self.lengths[row] // self.page_size
         if self.alloc.refcount(pages[j]) > 1:
             got = self._alloc_or_evict(1)
@@ -538,6 +549,24 @@ class PagedKVCache:
 
     def advance(self, row: int) -> None:
         self.lengths[row] += 1
+
+    def truncate_row(self, row: int, keep_tokens: int) -> None:
+        """Roll the row back to at most ``keep_tokens`` cached
+        positions, freeing pages wholly past the new end (speculative
+        rollback).  Popped pages are always privately held: rollback
+        only ever discards positions past the last committed token, and
+        nothing past the commit point is ever published to the prefix
+        tree or mapped by another row."""
+        keep = self.pages_for(keep_tokens)
+        pages = self.row_pages[row]
+        while len(pages) > keep:
+            p = pages.pop()
+            assert self.alloc.refcount(p) == 1, \
+                f"truncating shared page {p} of row {row}"
+            self.alloc.free([p])
+            self.table[row, len(pages)] = TRASH_PAGE
+        if self.lengths[row] > keep_tokens:
+            self.lengths[row] = keep_tokens
 
     def release_row(self, row: int) -> None:
         """Drop the row's references.  Shared pages survive while other

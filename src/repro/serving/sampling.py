@@ -300,7 +300,7 @@ class FusedSampler:
             for k in {0, self.logprob_k}
             for samp in (False, True) for trunc in (False, True)}
         self.dispatches = m.group("sampler.dispatches",
-                                  keys=("prefill", "decode"))
+                                  keys=("prefill", "decode", "verify"))
         self._h_dispatch = m.histogram("sampler.dispatch_s")
 
     @property
@@ -331,6 +331,79 @@ class FusedSampler:
         if self.tracer.enabled:
             self.tracer.complete(ENGINE_PID, 0, f"sampler:{kind}", tr0)
         return res
+
+
+    def run_block(self, logits, sl: slice, proposals: np.ndarray,
+                  kind: str = "verify") -> Dict[str, np.ndarray]:
+        """One fused dispatch over an (R, S, V) logits block — the
+        speculative-verify surface.
+
+        Slot ``s`` of row ``r`` is the token the engine WOULD commit at
+        generated-index ``pos[r] + s`` assuming ``proposals[r, :s]``
+        were the previous ``s`` commits: the per-slot state is exactly
+        what `SamplerState` would hold after ``s`` `note` calls — pos
+        advanced by ``s``, seen/out_seen OR'd with the proposal one-hots
+        — so every slot reproduces the baseline per-tick dispatch
+        bit-for-bit (same counter-based (seed, pos) PRNG stream, same
+        penalty masks, same specialization flags).  Returns flat
+        (R*S,) result arrays (slot ``r*S + s``), matching what
+        ``run`` returns for a batch of R*S rows.
+        """
+        logits = jax.block_until_ready(jnp.asarray(logits, jnp.float32))
+        t0 = time.perf_counter()
+        tr0 = self.tracer.now()
+        st = self.state
+        r, s_blk, vocab = logits.shape
+        proposals = np.asarray(proposals, np.int32).reshape(r, s_blk - 1)
+        masks = bool(st.uses_penalties[sl].any())
+        k = self.logprob_k if st.wants_logprobs[sl].any() else 0
+        samp = bool(st.is_sampled[sl].any())
+        trunc = samp and bool(st.uses_truncation[sl].any())
+
+        exp = {key: np.repeat(v, s_blk, axis=0)
+               for key, v in st.batch(sl, with_masks=False).items()}
+        exp["pos"] = (st.pos[sl][:, None]
+                      + np.arange(s_blk, dtype=np.int32)).reshape(-1)
+        if masks:
+            seen = np.repeat(st.seen[sl], s_blk, axis=0)
+            out_seen = np.repeat(st.out_seen[sl], s_blk, axis=0)
+            cum = np.zeros((r, vocab), bool)      # proposals committed < s
+            rows = np.arange(r)
+            for s in range(1, s_blk):
+                t = proposals[:, s - 1]
+                ok = (t >= 0) & (t < vocab)
+                cum[rows[ok], t[ok]] = True
+                seen[s::s_blk] |= cum
+                out_seen[s::s_blk] |= cum
+            exp["seen"], exp["out_seen"] = seen, out_seen
+
+        out = self._fns[k, samp, trunc](logits.reshape(r * s_blk, vocab),
+                                        exp)
+        res = {k2: np.asarray(v) for k2, v in out.items()}
+        self._h_dispatch.observe(time.perf_counter() - t0)
+        self.dispatches[kind] += 1
+        if self.tracer.enabled:
+            self.tracer.complete(ENGINE_PID, 0, f"sampler:{kind}", tr0)
+        return res
+
+
+def accept_counts(targets: np.ndarray, proposals: np.ndarray,
+                  limits: np.ndarray) -> np.ndarray:
+    """Commits per row for a verified block.
+
+    targets (R, S): the tokens the base model commits at each slot
+    (slot s valid under the hypothesis that proposals[:s] matched);
+    proposals (R, S-1): the draft's k proposals; limits (R,): number
+    of verify slots actually usable for the row (room/max_tokens).
+    A row commits targets[0..c-1] where c = 1 + the length of the
+    leading proposal prefix that matches the targets, clamped to the
+    row's limit — the deterministic-verify acceptance rule, exact for
+    greedy AND seeded sampling because targets ARE the baseline's
+    (seed, pos)-keyed draws.
+    """
+    match = (targets[:, :-1] == proposals).astype(np.int64)
+    run = np.cumprod(match, axis=1).sum(axis=1)
+    return np.minimum(1 + run, np.asarray(limits, np.int64)).astype(np.int64)
 
 
 def match_stop(tokens: List[int], stop) -> bool:

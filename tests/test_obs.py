@@ -18,7 +18,7 @@ Engine-level (tiny decoder, real jitted prefill/decode):
   an oversubscribed pool — the busiest instrumented paths),
 - ``shutdown()`` leak audit: clean engines report zero anomalies,
   corrupted bookkeeping increments ``kv.leak_anomalies`` instead of
-  raising.
+  raising — including rows in the speculative draft pool.
 """
 import json
 
@@ -179,12 +179,12 @@ def tiny():
 
 def _run(model, params, *, tracer=None, num_pages=None, seed=0,
          n_req=6, max_new=6, prefix_cache=False, prefill_chunk=None,
-         debug_leak_check=False):
+         debug_leak_check=False, draft=None):
     eng = Engine(model, params, max_concurrency=2, max_len=64,
                  eos_id=-1, page_size=8, num_pages=num_pages,
                  tracer=tracer, prefix_cache=prefix_cache,
                  prefill_chunk=prefill_chunk,
-                 debug_leak_check=debug_leak_check,
+                 debug_leak_check=debug_leak_check, draft=draft,
                  scheduler=SchedulerConfig(max_queue=n_req + 1))
     rng = np.random.default_rng(seed)
     shared = rng.integers(2, TINY.vocab_size, size=11).astype(np.int32)
@@ -269,5 +269,26 @@ def test_leak_check_clean_and_corrupted(tiny):
     # corrupt the bookkeeping: a page allocated but held by no row
     eng.kv.alloc.alloc(1)
     eng.shutdown()
+    assert eng.last_leak_error is not None
+    assert eng.metrics.snapshot()["kv.leak_anomalies"] == 1
+
+
+def test_leak_audit_covers_draft_kv_rows(tiny):
+    """The shutdown audit extends to the speculative draft pool: a
+    clean spec engine reports zero anomalies, and a corrupted DRAFT
+    row (base pool untouched) still lands in ``kv.leak_anomalies`` /
+    ``last_leak_error``."""
+    model, params = tiny
+    from repro.serving.draft import build_draft
+    _, dm, dp = build_draft(TINY, params, "1/8")
+    eng, _ = _run(model, params, n_req=3, max_new=4,
+                  debug_leak_check=True, draft=(dm, dp))
+    eng.shutdown()
+    assert eng.last_leak_error is None
+    assert eng.metrics.snapshot()["kv.leak_anomalies"] == 0
+    # corrupt only the draft pool's bookkeeping
+    eng.spec.kv.alloc.alloc(1)
+    eng.kv.leak_check()                 # base pool audits clean...
+    eng.shutdown()                      # ...the draft audit catches it
     assert eng.last_leak_error is not None
     assert eng.metrics.snapshot()["kv.leak_anomalies"] == 1

@@ -17,6 +17,14 @@ oversubscription (preemption-recompute), AND a fully-provisioned
 ``generate_batch`` — the counter-based (seed, position) PRNG streams
 make sampled decode exactly as replayable as greedy.
 
+Harness 1c (speculative decoding): self-speculative decode — a
+compressed draft rung proposing k tokens per tick, verified by the
+base model in one dispatch — must be bitwise token-identical to the
+non-speculative engine under the SAME adversarial axes: mixed
+greedy/sampled rows, prefix cache on/off, every chunk size, pools
+down to oversubscription (preemption + draft-row rollback), and both
+draft rungs (1/8, 1/16).  Both KV pools must audit leak-free after.
+
 Harness 2 (stateful): a hypothesis ``RuleBasedStateMachine`` (falling
 back to the conftest stub's deterministic random-walk mode when the real
 package is absent) over raw ``PageAllocator`` + ``PagedKVCache``
@@ -61,6 +69,14 @@ def tiny():
     return m, m.init(jax.random.PRNGKey(0))
 
 
+@pytest.fixture(scope="module")
+def tiny_drafts(tiny):
+    """Two draft rungs off the same served weights (shallow + deep)."""
+    from repro.serving.draft import build_draft
+    _, params = tiny
+    return {r: build_draft(TINY, params, r)[1:] for r in ("1/8", "1/16")}
+
+
 # ---------------------------------------------------------------------------
 # differential fuzz: prefix on == prefix off == generate_batch
 # ---------------------------------------------------------------------------
@@ -92,10 +108,10 @@ def _workload(rng):
 
 
 def _run(m, params, prompts, prios, max_new, *, prefix, chunk, num_pages,
-         deadline=None, sampling=None):
+         deadline=None, sampling=None, draft=None, spec_k=3):
     eng = Engine(m, params, max_concurrency=3, max_len=MAX_LEN, eos_id=-1,
                  page_size=PAGE, num_pages=num_pages, prefix_cache=prefix,
-                 prefill_chunk=chunk,
+                 prefill_chunk=chunk, draft=draft, spec_k=spec_k,
                  scheduler=SchedulerConfig(policy="priority", max_queue=64,
                                            deadline_s=deadline))
     reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new,
@@ -109,6 +125,9 @@ def _run(m, params, prompts, prios, max_new, *, prefix, chunk, num_pages,
     retained = eng.kv.prefix.num_pages if eng.kv.prefix is not None else 0
     assert eng.kv.alloc.num_used == retained
     assert all(r is None for r in eng.rows) and not eng._prefilling
+    if eng.spec is not None:        # draft pool: private, fully drained
+        eng.spec.leak_check()
+        assert eng.spec.kv.alloc.num_used == 0
     return ({r.uid: list(r.tokens) for r in done}, accepted,
             {r.uid: r.status for r in reqs}, eng)
 
@@ -311,6 +330,100 @@ def test_fuzz_seeded_sampling_preemption_mid_prefill(tiny):
     assert tight == full
     assert eng.stats()["preemptions"] > 0, \
         "pool sizing did not force a preemption"
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: spec on == spec off, bitwise
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=FAST_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_fuzz_spec_decode_token_identical(tiny, tiny_drafts, seed):
+    """Self-speculative decode is an implementation detail: the same
+    workload (mixed greedy/sampled rows, explicit + engine-drawn seeds)
+    through a speculative engine — random draft rung, proposal depth,
+    chunk size, prefix on/off, pools down to oversubscription — emits
+    bitwise the tokens of the non-speculative engine."""
+    m, params = tiny
+    rng = np.random.default_rng(seed)
+    prompts, prios, max_new = _workload(rng)
+    sps = [_sampling_params(rng, max_new) for _ in prompts]
+    num_pages = int(rng.integers(8, 26))
+    chunk = [None, 1, 3, PAGE][int(rng.integers(4))]
+    prefix = bool(rng.integers(2))
+    draft = tiny_drafts[("1/8", "1/16")[int(rng.integers(2))]]
+    k = int(rng.integers(2, 5))
+
+    base, acc_b, _, _ = _run(m, params, prompts, prios, max_new,
+                             prefix=prefix, chunk=chunk,
+                             num_pages=num_pages, sampling=sps)
+    spec, acc_s, _, eng = _run(m, params, prompts, prios, max_new,
+                               prefix=prefix, chunk=chunk,
+                               num_pages=num_pages, sampling=sps,
+                               draft=draft, spec_k=k)
+    assert acc_b == acc_s == set(range(len(prompts)))
+    assert spec == base, (chunk, num_pages, prefix, k)
+    st_ = eng.stats()["spec"]
+    assert st_["verify_dispatches"] > 0
+    assert 0.0 <= st_["accept_rate"] <= 1.0
+
+
+@pytest.mark.slow
+@settings(max_examples=max(SLOW_EXAMPLES // 5, 2), deadline=None)
+@given(seed=st.integers(3 * 10 ** 6, 4 * 10 ** 6))
+def test_fuzz_spec_decode_full_sweep(tiny, tiny_drafts, seed):
+    """Slow tier: one workload, the spec-off baseline, then a draft
+    rung across the prefix/chunk axes must reproduce it.  Every spec
+    engine jit-compiles its own propose/verify dispatches, so examples
+    and arms are budgeted tighter than the other sweeps."""
+    m, params = tiny
+    rng = np.random.default_rng(seed)
+    prompts, prios, max_new = _workload(rng)
+    sps = [_sampling_params(rng, max_new) for _ in prompts]
+    num_pages = int(rng.integers(8, 26))
+    rung = ("1/8", "1/16")[seed % 2]
+    k = int(rng.integers(2, 5))
+    base, acc, _, _ = _run(m, params, prompts, prios, max_new,
+                           prefix=True, chunk=None, num_pages=num_pages,
+                           sampling=sps)
+    assert acc == set(range(len(prompts)))
+    for prefix, chunk in [(False, None), (True, 3), (True, PAGE)]:
+        toks, acc, _, _ = _run(m, params, prompts, prios, max_new,
+                               prefix=prefix, chunk=chunk,
+                               num_pages=num_pages, sampling=sps,
+                               draft=tiny_drafts[rung], spec_k=k)
+        assert acc == set(range(len(prompts)))
+        assert toks == base, (rung, prefix, chunk, num_pages)
+
+
+def test_fuzz_spec_decode_preemption_mid_prefill(tiny, tiny_drafts):
+    """The mid-chunked-prefill preemption scenario with speculation on:
+    draft rows roll back with their base rows, recompute replays both
+    PRNG streams, and the tight pool reproduces the fully-provisioned
+    non-speculative tokens."""
+    m, params = tiny
+    rng = np.random.default_rng(11)
+    short = [rng.integers(2, TINY.vocab_size, size=6).astype(np.int32)
+             for _ in range(2)]
+    long_p = rng.integers(2, TINY.vocab_size, size=40).astype(np.int32)
+    prompts = short + [long_p]
+    prios = [0] * len(prompts)
+    # longer decodes than the non-spec variant of this test: speculation
+    # finishes rows in fewer ticks, so sustained growth (max_new=24) is
+    # what actually exhausts an 11-page pool mid-decode
+    sps = [SamplingParams(temperature=1.1, top_p=0.9, seed=50 + i,
+                          max_tokens=24) for i in range(len(prompts))]
+
+    full, _, _, _ = _run(m, params, prompts, prios, 24, prefix=True,
+                         chunk=4, num_pages=None, sampling=sps)
+    tight, _, _, eng = _run(m, params, prompts, prios, 24, prefix=True,
+                            chunk=4, num_pages=11, sampling=sps,
+                            draft=tiny_drafts["1/8"], spec_k=3)
+    assert tight == full
+    assert eng.stats()["preemptions"] > 0, \
+        "pool sizing did not force a preemption"
+    # rejected proposals were actually rolled back along the way
+    assert eng.metrics.snapshot()["spec.rollback_tokens"] > 0
 
 
 # ---------------------------------------------------------------------------

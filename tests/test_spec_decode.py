@@ -1,0 +1,242 @@
+"""Self-speculative decoding: the draft ladder's derivation invariants
+and the policy round-trip through artifacts.
+
+- a draft `CompressionPolicy` survives the ``.hnart`` header and the
+  registry metadata channel byte-for-byte (``policy_to_dict`` /
+  ``policy_from_dict`` stay exact inverses through both),
+- hash seeds are ratio-independent: every rung of the ladder
+  re-addresses the same per-slot hash streams as the served banks
+  (this is what makes a policy rung a *free* draft model),
+- the equal-ratio rung aliases every param leaf by reference — the
+  zero-copy degenerate draft,
+- ``Engine.from_artifact(..., draft_policy=...)`` cold-starts a
+  speculative engine off one mmap whose output is bitwise the
+  non-speculative engine's,
+- spec.* metrics land in the engine's MAIN registry while the draft
+  pool keeps its accounting private (no aliasing of kv.* counters),
+- the regression gate's fresh-only-key semantics: sections the
+  baseline predates WARN at ``--level invariants``, never fail.
+
+Distribution-identity under preemption / prefix cache / chunked
+prefill is fuzz-pinned in tests/test_serving_fuzz.py.
+"""
+import importlib.util
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro import artifact
+from repro.artifact import format as afmt
+from repro.artifact import registry as areg
+from repro.configs.base import ArchConfig
+from repro.models import build
+from repro.policy import rules as POL
+from repro.serving import draft as draft_lib
+from repro.serving.engine import Engine, Request
+from repro.serving.api import SamplingParams
+
+TINY = ArchConfig(
+    name="tiny-spec", family="dense", arch_kind="decoder",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, remat=False, dtype="float32")
+
+
+# ---------------------------------------------------------------------------
+# policy round-trip: .hnart header + registry metadata
+# ---------------------------------------------------------------------------
+
+def test_draft_policy_roundtrips_header_and_registry(tmp_path):
+    pol = POL.CompressionPolicy(
+        rules=(POL.PolicyRule(match="layers.attn.*", compression=0.25),),
+        compression=0.125)
+    cfg = TINY.policy_variant(pol)
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "draft.hnart")
+    artifact.export_model(path, cfg, params)
+
+    # channel 1: the artifact header carries the full policy
+    cfg2, _, _ = artifact.load_model(path)
+    assert cfg2 == cfg
+    assert POL.effective(cfg2) == pol
+    header = afmt.read_header(path)
+    assert POL.policy_from_dict(header["config"]["hash_policy"],
+                                strict=False) == pol
+
+    # channel 2: registry metadata names the draft rung for cold starts
+    root = str(tmp_path / "reg")
+    areg.register(root, "toy", path,
+                  metadata={"draft_policy": POL.policy_to_dict(pol)})
+    e = areg.resolve(root, "toy")
+    assert POL.policy_from_dict(e["metadata"]["draft_policy"]) == pol
+
+
+# ---------------------------------------------------------------------------
+# ladder invariants: shared seeds, zero-copy top rung
+# ---------------------------------------------------------------------------
+
+def test_draft_banks_reuse_base_seeds_across_ratios():
+    """Seeds key on the slot, never the ratio: every rung of the ladder
+    hashes into the same per-slot streams as the served banks."""
+    from repro.models.transformer import bank_spec_map
+    base = TINY.hashed_variant(0.25)
+    base_specs = bank_spec_map(base)
+    assert any(s is not None for s in base_specs.values())
+    for ratio in (0.25, 0.125, 1 / 16):
+        pol = draft_lib.resolve_draft_policy(ratio, base)
+        dspecs = bank_spec_map(base.policy_variant(pol).with_(
+            name="tiny-spec-draft"))
+        assert set(dspecs) == set(base_specs)
+        for path, bs in base_specs.items():
+            ds = dspecs[path]
+            if bs is None:
+                assert ds is None, path
+                continue
+            assert ds.seed == bs.seed, (path, ratio)
+            assert ds.virtual_shape == bs.virtual_shape, (path, ratio)
+            assert ds.mode == bs.mode and ds.exec_path == bs.exec_path
+
+
+def test_equal_ratio_draft_aliases_every_leaf():
+    """The degenerate top rung: draft spec == base spec on every slot,
+    so derive_draft_params aliases the whole tree by reference."""
+    base = TINY.hashed_variant(0.125)
+    m = build(base)
+    params = m.init(jax.random.PRNGKey(0))
+    dcfg, dmodel, dparams = draft_lib.build_draft(base, params, 0.125)
+    lb = jax.tree_util.tree_leaves(params)
+    ld = jax.tree_util.tree_leaves(dparams)
+    assert len(lb) == len(ld)
+    assert all(a is b for a, b in zip(ld, lb))
+
+
+def test_deeper_rung_shrinks_banks_but_aliases_dense():
+    base = TINY.hashed_variant(0.25)
+    m = build(base)
+    params = m.init(jax.random.PRNGKey(0))
+    _, _, dparams = draft_lib.build_draft(base, params, 1 / 16)
+    n_alias = n_shrunk = 0
+    flat_b = jax.tree_util.tree_leaves_with_path(params)
+    flat_d = jax.tree_util.tree_leaves_with_path(dparams)
+    for (pb, b), (pd, d) in zip(flat_b, flat_d):
+        assert pb == pd
+        if d is b:
+            n_alias += 1
+        else:
+            assert d.size < b.size, pb
+            n_shrunk += 1
+    assert n_alias > 0 and n_shrunk > 0
+
+
+# ---------------------------------------------------------------------------
+# cold start: one mmap feeds both models
+# ---------------------------------------------------------------------------
+
+def test_from_artifact_draft_policy_bitwise_identical(tmp_path):
+    cfg = TINY.hashed_variant(0.125)
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    path = str(tmp_path / "m.hnart")
+    artifact.export_model(path, cfg, params)
+    root = str(tmp_path / "reg")
+    areg.register(root, "toy", path)
+
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(2, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 9, 7)]
+    sps = [None,
+           SamplingParams(temperature=0.9, top_p=0.9, seed=7,
+                          max_tokens=6),
+           None]
+
+    def run(**extra):
+        eng = Engine.from_artifact("toy", registry_root=root, slots=2,
+                                   max_len=64, eos_id=-1, page_size=8,
+                                   **extra)
+        for uid, (p, sp) in enumerate(zip(prompts, sps)):
+            assert eng.submit(Request(uid=uid, prompt=p.copy(),
+                                      max_new_tokens=6, sampling=sp))
+        done = eng.run()
+        return {r.uid: list(r.tokens) for r in done}, eng
+
+    base, _ = run()
+    spec, eng = run(draft_policy="1/16", spec_k=3)
+    assert spec == base
+    st = eng.stats()["spec"]
+    assert st["verify_dispatches"] > 0 and st["k"] == 3
+    eng.spec.leak_check()
+    assert eng.spec.kv.alloc.num_used == 0
+
+
+# ---------------------------------------------------------------------------
+# observability placement
+# ---------------------------------------------------------------------------
+
+def test_spec_metrics_in_main_registry_draft_pool_private():
+    cfg = TINY.hashed_variant(0.25)
+    m = build(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    _, dm, dp = draft_lib.build_draft(cfg, params, 1 / 8)
+    eng = Engine(m, params, max_concurrency=2, max_len=64, eos_id=-1,
+                 page_size=8, draft=(dm, dp), spec_k=3)
+    rng = np.random.default_rng(1)
+    for uid in range(3):
+        eng.submit(Request(uid=uid,
+                           prompt=rng.integers(2, cfg.vocab_size, 6)
+                           .astype(np.int32),
+                           max_new_tokens=5))
+    eng.run()
+    snap = eng.metrics.snapshot()
+    for name in ("spec.ticks", "spec.proposed", "spec.accepted_drafts",
+                 "spec.rollback_tokens", "spec.draft_dispatches",
+                 "spec.verify_dispatches", "spec.accept_len"):
+        assert name in snap, name
+    assert snap["spec.ticks"] > 0
+    assert snap["spec.accept_len"]["count"] > 0
+    # the draft pool's page accounting must NOT alias the base kv.*
+    # metrics: its cache publishes into a private registry
+    assert eng.spec._kv_metrics is not eng.metrics
+    assert "kv.pages_fresh" in eng.spec._kv_metrics.snapshot()
+    st = eng.stats()["spec"]
+    assert st["ticks"] == snap["spec.ticks"]
+    assert 0.0 <= st["accept_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# regression-gate semantics for freshly grown bench sections
+# ---------------------------------------------------------------------------
+
+def _load_check_regression():
+    p = pathlib.Path(__file__).resolve().parents[1] / "benchmarks" \
+        / "check_regression.py"
+    spec = importlib.util.spec_from_file_location("_check_regression", p)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_regression_gate_fresh_only_sections_warn_not_fail():
+    """A new bench section (e.g. spec_decode landing in this PR) must
+    never block at --level invariants: fresh-only keys WARN.  A key
+    *missing* from fresh results stays a hard failure."""
+    cr = _load_check_regression()
+    base = {"mixed_sampling": {"tokens_match": True, "tok_s": 1.0}}
+    fresh = {"mixed_sampling": {"tokens_match": True, "tok_s": 9.0},
+             "spec_decode": {"tokens_match": True, "accept_rate": 0.9,
+                             "speedup": 1.3}}
+    probs = list(cr.compare(base, fresh, level="invariants",
+                            tight_tol=0.05, perf_tol=0.75))
+    assert probs and all(sev == "warn" for sev, _ in probs)
+    assert any("spec_decode" in msg for _, msg in probs)
+    # shrinking the bench is a regression, not a warning
+    probs = list(cr.compare(fresh, base, level="invariants",
+                            tight_tol=0.05, perf_tol=0.75))
+    assert any(sev == "fail" and "missing key" in msg
+               for sev, msg in probs)
+    # spec correctness/accounting keys gate once baselined
+    assert cr.classify(("spec_decode", "tokens_match")) == cr.EXACT
+    assert cr.classify(("spec_decode", "spec_k")) == cr.EXACT
+    assert cr.classify(("spec_decode", "accept_rate")) == cr.TIGHT
+    assert cr.classify(("spec_decode", "speedup")) == cr.PERF
