@@ -67,6 +67,15 @@ _TIGHT_KEYS = {
     "engine.tokens", "engine.done", "kv.leak_anomalies",
     "accept_rate", "mean_accept_len", "draft_dispatches",
     "verify_dispatches",
+    # batched ragged prefill: fused-dispatch accounting is a pure
+    # function of the workload shape + prefill budget (deterministic
+    # grouping), so it gates tightly in both the row keys and the raw
+    # registry-delta names
+    "prefill_batch_dispatches", "prefill_batch_rows",
+    "prefill_batch_tokens", "fallback_chunks",
+    "engine.prefill_batch.dispatches", "engine.prefill_batch.rows",
+    "engine.prefill_batch.tokens",
+    "engine.prefill_batch.fallback_chunks",
 }
 # Sections whose token streams are sampled / arrival-order dependent:
 # even "tokens" class keys degrade to PERF there (stop sequences fire

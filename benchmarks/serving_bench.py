@@ -37,6 +37,13 @@ delta and a bitwise token-identity cross-check (tracing must never
 change what the engine emits).  ``--trace-out`` exports the traced
 arm's Perfetto file (the CI artifact).
 
+A sixth section benches **batched ragged prefill** under a high
+arrival rate: every request lands at t=0 (the burst that used to
+serialize one chunk dispatch per request), and the same shared-prefix
+workload runs with ``batched_prefill`` on vs off at a prefill budget
+wide enough to coalesce — reporting mean/p50 TTFT for both arms, the
+fused-dispatch counters, and a bitwise token-identity cross-check.
+
 All counter numbers are workload-only deltas of the engine's metrics
 registry (``repro.obs``) — snapshot after warmup, diff at the end —
 instead of hand-rolled per-key subtraction.
@@ -454,6 +461,96 @@ def bench_obs_overhead(model, params, cfg, *, concurrency: int,
     return row
 
 
+def bench_prefill_batch(model, params, cfg, *, concurrency: int,
+                        users: int, sys_len: int, tail_len: int,
+                        max_new: int, max_len: int, page_size: int,
+                        prefill_chunk: int) -> dict:
+    """High-arrival-rate TTFT: batched ragged prefill on vs off.
+
+    All requests arrive at t=0 (a burst) and the prefill budget
+    (``max_prefills_per_tick``) covers the whole batch, so the batched
+    arm coalesces every row's chunk into one ragged dispatch per tick
+    while the sequential arm pays one dispatch per row per tick — the
+    serialization this section exists to measure.  Shared-prefix
+    prompts keep the prefix cache in the loop (COW tail resolution on
+    the batched path).  Cross-checks bitwise token identity between
+    arms and reports the fused-dispatch counters.
+    """
+    rng = np.random.default_rng(5)
+    sys_prompt = rng.integers(2, cfg.vocab_size,
+                              size=sys_len).astype(np.int32)
+    prompts = [np.concatenate([sys_prompt, rng.integers(
+        2, cfg.vocab_size, size=tail_len).astype(np.int32)])
+        for _ in range(users)]
+
+    def run(batched: bool):
+        eng = Engine(model, params, max_concurrency=concurrency,
+                     max_len=max_len, eos_id=-1, page_size=page_size,
+                     prefix_cache=True, prefill_chunk=prefill_chunk,
+                     batched_prefill=batched,
+                     scheduler=SchedulerConfig(
+                         max_queue=users + 2,
+                         max_prefills_per_tick=concurrency))
+        # warmup compiles the arm's steady state: cold chunked prefill,
+        # the prefix-hit path, and (batched arm) the ragged dispatch
+        # widths the burst will hit
+        warm_tail = np.asarray([2, 3] * (tail_len // 2 + 1),
+                               np.int32)[:tail_len]
+        for uid in range(-concurrency, 0):
+            tail = warm_tail if uid % 2 else warm_tail[::-1].copy()
+            eng.submit(Request(
+                uid=uid, prompt=np.concatenate([sys_prompt, tail]),
+                max_new_tokens=2))
+        eng.run()
+        eng._done.clear()
+        base = eng.metrics.snapshot()
+
+        reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        t0 = time.time()
+        for r in reqs:               # the burst: all requests at t=0
+            eng.submit(r)
+        eng.run()
+        wall = time.time() - t0
+        eng.kv.leak_check()
+        stats = eng.stats()
+        d = _workload_delta(eng, base)
+        out = {"tok_per_s": round(d["engine.tokens"] / wall, 2),
+               "wall_s": round(wall, 3),
+               "ttft_mean_s": round(stats.get("ttft_mean_s", 0.0), 4),
+               "ttft_p50_s": round(stats.get("ttft_p50_s", 0.0), 4),
+               "prefill_chunks": d["sched.prefill_chunks"],
+               "prefill_batch_dispatches":
+                   d.get("engine.prefill_batch.dispatches", 0),
+               "prefill_batch_rows":
+                   d.get("engine.prefill_batch.rows", 0),
+               "prefill_batch_tokens":
+                   d.get("engine.prefill_batch.tokens", 0),
+               "fallback_chunks":
+                   d.get("engine.prefill_batch.fallback_chunks", 0)}
+        return out, {r.uid: list(r.tokens) for r in reqs}
+
+    off, toks_off = run(False)
+    on, toks_on = run(True)
+    row = {"concurrency": concurrency, "users": users,
+           "sys_prompt_len": sys_len, "tail_len": tail_len,
+           "max_new": max_new, "prefill_chunk": prefill_chunk,
+           "off": off, "on": on,
+           "tokens_match": toks_on == toks_off,
+           "prefill_batch_dispatches": on["prefill_batch_dispatches"],
+           "prefill_batch_rows": on["prefill_batch_rows"],
+           "fallback_chunks": on["fallback_chunks"],
+           "ttft_speedup": round(off["ttft_mean_s"]
+                                 / max(on["ttft_mean_s"], 1e-9), 3)}
+    print(f"prefill-batch @ c={concurrency}: ttft "
+          f"{off['ttft_mean_s']:.3f}s -> {on['ttft_mean_s']:.3f}s "
+          f"({row['ttft_speedup']}x), "
+          f"{on['prefill_batch_dispatches']} fused dispatches / "
+          f"{on['prefill_batch_rows']} row-chunks, "
+          f"match={row['tokens_match']}")
+    return row
+
+
 def main(smoke: bool = False, out_json: str = "BENCH_serving.json",
          trace_out: str = None) -> dict:
     levels = (1, 2, 4) if smoke else (1, 4, 8)
@@ -508,6 +605,13 @@ def main(smoke: bool = False, out_json: str = "BENCH_serving.json",
         requests=6 if smoke else 18,
         max_new=24, max_len=128, page_size=16,
         spec_k=4, draft_policy="1/8")
+    # batched ragged prefill: burst arrival, batched on vs off
+    results["prefill_batch"] = bench_prefill_batch(
+        model, params, cfg, concurrency=8,
+        users=8 if smoke else 16,
+        sys_len=48 if smoke else 64, tail_len=8,
+        max_new=4 if smoke else 16, max_len=128, page_size=16,
+        prefill_chunk=16)
     # observability overhead: tracer off vs on, same workload
     results["obs_overhead"] = bench_obs_overhead(
         model, params, cfg, concurrency=8,

@@ -8,6 +8,8 @@ truth every Pallas kernel is swept against.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -98,6 +100,61 @@ def paged_attention_ref(q, pages_k, pages_v, page_table, lengths, window=0):
     probs = jnp.where(valid[:, None, None, :], probs, 0.0)
     out = jnp.einsum("bkgt,btkd->bkgd", probs, v)
     return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def paged_prefill_ref(q, pages_k, pages_v, page_table, starts, counts,
+                      window=0):
+    """Ragged batched prefill attention through a paged KV cache,
+    gather-then-attend.
+
+    Same contract as kernels.flash_prefill.paged_prefill_attention:
+    q (B, S, Hq, D) rotated, scaled by 1/sqrt(D) here; pages_k/v
+    (P, ps, Hkv, D) already containing the chunk's freshly scattered
+    K/V; page_table (B, MAXP) int32 (unused slots -> trash page 0);
+    starts (B,) first query position of each row's chunk; counts (B,)
+    real (un-padded) query rows, 0 disables the row; window 0 disables.
+
+    Query slot s sits at position ``starts[b] + s`` and attends the
+    causal band ``kv_pos <= q_pos`` intersected with the row's live
+    prefix ``kv_pos < starts[b] + counts[b]``.  Slots at or past
+    ``counts[b]`` are pad: fully masked, output zero.
+
+    Arithmetic deliberately mirrors ``nn.attention._attend_unchunked``
+    op for op (fp32 scaled-score einsum, -1e30 masked fill, softmax,
+    value contraction with probs cast to the pool dtype): for a real
+    query the masked score row here is elementwise identical to the
+    sequential dense-cache path's, which is what makes the engine's
+    batched prefill bitwise-equal to its sequential chunked prefill.
+    """
+    b, s, hq, d = q.shape
+    _, ps, n_kv, _ = pages_k.shape
+    g = hq // n_kv
+    k = jnp.take(pages_k, page_table, axis=0)       # (B, MAXP, ps, Hkv, D)
+    v = jnp.take(pages_v, page_table, axis=0)
+    t = page_table.shape[1] * ps
+    k = k.reshape(b, t, n_kv, d)
+    v = v.reshape(b, t, n_kv, d)
+    scale = 1.0 / math.sqrt(d)
+    qg = q.reshape(b, s, n_kv, g, d)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32)
+    kv_pos = jnp.arange(t)[None, None, :]            # (1, 1, T)
+    q_pos = (starts[:, None] + jnp.arange(s)[None, :])[:, :, None]
+    end = (starts + counts)[:, None, None]
+    valid = (kv_pos <= q_pos) & (kv_pos < end)
+    valid = valid & (jnp.arange(s)[None, :, None] < counts[:, None, None])
+    window = jnp.asarray(window)
+    valid = valid & jnp.where(window > 0, q_pos - kv_pos < window, True)
+    neg = jnp.asarray(-1e30, jnp.float32)
+    scores = jnp.where(valid[:, None, None, :, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # pad query slots (and count-0 rows) are fully masked: zero them
+    # instead of the uniform-over-garbage softmax.  Real-query rows are
+    # untouched: their masked entries already underflowed to exactly 0.
+    probs = jnp.where(valid[:, None, None, :, :], probs, 0.0)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, hq, d).astype(q.dtype)
 
 
 def paged_attention_shared_ref(q, pages_k, pages_v, page_table, lengths,

@@ -60,6 +60,18 @@ class Model(NamedTuple):
     # kinds where a wider batch is not bitwise row-equivalent (MoE
     # capacity routing mixes rows).
     decode_paged_block: Optional[Callable] = None
+    # prefill_paged: (params, tokens(B,S), pages, page_table(B,MAXP),
+    #                 starts(B,), counts(B,), write_from(B,), impl)
+    #   -> (last_hidden(B,1,d_model), pages)
+    # batched ragged prefill straight into paged KV — returns the last
+    # REAL slot's hidden state, not logits: the engine runs logits_head
+    # on the (1, 1, d) per-row slice so the LM-head GEMM keeps the exact
+    # M=1 dispatch shape of the sequential path (M=1 GEMV results are
+    # not bitwise row-equal to wider GEMMs).  None for MoE.
+    prefill_paged: Optional[Callable] = None
+    # logits_head: (params, x(B,S,d_model)) -> logits — final norm + LM
+    # head, exactly the tail of prefill/decode.
+    logits_head: Optional[Callable] = None
 
 
 # ---------------------------------------------------------------------------
@@ -580,6 +592,45 @@ def _build_decoder(cfg: ArchConfig) -> Model:
             body, x, (params["layers"], is_global, pages["k"], pages["v"]))
         return logits_fn(params, x), {"k": nk, "v": nv}
 
+    def prefill_paged(params, tokens, pages, page_table, starts, counts,
+                      write_from, impl="ref"):
+        """Batched ragged prefill chunks straight into the paged cache.
+
+        tokens (B, S); slot s of row b is the prompt token at position
+        ``starts[b] + s``, real iff ``s < counts[b]`` (``counts == 0``
+        rows are inert padding).  Fresh K/V lands in each row's private
+        pages through the table (positions below ``write_from[b]`` —
+        shared prefix pages — are write-protected), no per-request
+        scratch cache.  Returns the LAST REAL slot's hidden state
+        (B, 1, d_model) — run ``logits_head`` on a per-row (1, 1, d)
+        slice to finish, preserving the sequential path's M=1 LM-head
+        dispatch.  Per-row compute is bitwise-identical to the
+        sequential chunked path: every sublayer is row-wise and the
+        attention arithmetic mirrors the dense-scratch path op for op
+        (kernels.ref.paged_prefill_ref).
+        """
+        x = L.embedding_lookup(emb_plan, params["embed"], tokens)
+        x = shd.constraint(x, P(L.BATCH, None, None))
+
+        def body(x, xs):
+            lp, glob, pk, pv = xs
+            h = norm_apply(lp["ln1"], x)
+            a, (nk, nv) = ATT.apply_paged_prefill(
+                attn_plan, lp["attn"], h, pages=(pk, pv),
+                page_table=page_table, starts=starts, counts=counts,
+                write_from=write_from, is_global=glob, impl=impl)
+            x = x + a
+            h = norm_apply(lp["ln2"], x)
+            f = FFN.apply(ffn_plan, lp["ffn"], h)
+            x = shd.constraint(x + f, P(L.BATCH, None, None))
+            return x, (nk, nv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], is_global, pages["k"], pages["v"]))
+        last = jnp.clip(counts - 1, 0, tokens.shape[1] - 1)
+        x = jnp.take_along_axis(x, last[:, None, None], axis=1)
+        return x, {"k": nk, "v": nv}
+
     def pspecs():
         cell = []
         jax.eval_shape(lambda k: build_params(k, cell),
@@ -592,7 +643,9 @@ def _build_decoder(cfg: ArchConfig) -> Model:
                  decode_paged=decode_paged,
                  # MoE capacity routing is batch-shape dependent, so a
                  # wider block is not bitwise row-equal there
-                 decode_paged_block=None if use_moe else decode_paged_block)
+                 decode_paged_block=None if use_moe else decode_paged_block,
+                 prefill_paged=None if use_moe else prefill_paged,
+                 logits_head=logits_fn)
 
 
 # ===========================================================================

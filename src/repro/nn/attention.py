@@ -364,6 +364,81 @@ def apply_paged_block(plan: AttentionPlan, params, x, *, pages, page_table,
     return L.linear_apply(o_lin, params["o"], out), (pk, pv)
 
 
+def apply_paged_prefill(plan: AttentionPlan, params, x, *, pages,
+                        page_table, starts, counts, write_from,
+                        is_global=None, impl: str = "ref"):
+    """Batched ragged prefill chunk through a paged KV cache.
+
+    x: (B, S, d_model); slot ``s`` of row ``b`` holds the prompt token
+    at absolute position ``starts[b] + s`` and is real iff
+    ``s < counts[b]`` (rows with ``counts == 0`` are inert padding
+    rows).  Real slots at positions >= ``write_from[b]`` write K/V
+    straight into the row's pages through the table — ``write_from`` is
+    the first position of the row's private whole-page landing zone, so
+    shared (refcount > 1) prefix pages are never written even when a
+    slid-back chunk recomputes positions that live on them.  All other
+    slots write the trash page (0), whose contents are never read back.
+    Every real slot then attends its own causal band over the row's
+    paged prefix (shared pages read through the table, like decode).
+
+    For a real query this produces bitwise the scores/probs/output of
+    the sequential dense-scratch-cache path (``apply`` with a scalar
+    cache index) — the parity the engine's batched-vs-sequential
+    token-identity guarantee rests on; see kernels.ref.paged_prefill_ref.
+
+    Returns (out (B, S, d_model), (new_pk, new_pv)).  impl: "ref"
+    (gather-then-attend oracle, bitwise vs the dense path) or "pallas"
+    (ragged flash-prefill kernel; interpret mode off-TPU).
+    """
+    from repro.kernels import flash_prefill as FP
+    from repro.kernels import ref as KREF
+
+    b, s_blk, _ = x.shape
+    q = _project(plan, params, "q", x, plan.num_heads)
+    k = _project(plan, params, "k", x, plan.num_kv_heads)
+    v = _project(plan, params, "v", x, plan.num_kv_heads)
+    if plan.qk_norm:
+        q = L.rmsnorm_apply(params["q_norm"], q)
+        k = L.rmsnorm_apply(params["k_norm"], k)
+    offs = jnp.arange(s_blk, dtype=jnp.int32)[None, :]
+    positions = starts[:, None] + offs                # (B, S)
+    if plan.use_rope:
+        q = L.rope(q, positions, plan.rope_theta)
+        k = L.rope(k, positions, plan.rope_theta)
+
+    pk, pv = pages
+    ps = pk.shape[1]
+    maxp = page_table.shape[1]
+    wvalid = (offs < counts[:, None]) \
+        & (positions >= write_from[:, None])          # (B, S)
+    # clamp the page slot for padding positions that run past the
+    # table; their writes are redirected to the trash page anyway
+    pno = jnp.minimum(positions // ps, maxp - 1)
+    pidx = jnp.where(wvalid,
+                     jnp.take_along_axis(page_table, pno, axis=1), 0)
+    poff = positions % ps
+    pk = pk.at[pidx.reshape(-1), poff.reshape(-1)].set(
+        k.reshape(b * s_blk, *k.shape[2:]).astype(pk.dtype))
+    pv = pv.at[pidx.reshape(-1), poff.reshape(-1)].set(
+        v.reshape(b * s_blk, *v.shape[2:]).astype(pv.dtype))
+
+    if plan.sliding_window > 0:
+        window = jnp.asarray(plan.sliding_window, jnp.int32)
+        if is_global is not None:
+            window = jnp.where(is_global, 0, window)
+    else:
+        window = jnp.asarray(0, jnp.int32)
+
+    fn = FP.paged_prefill_attention if impl == "pallas" \
+        else KREF.paged_prefill_ref
+    out = fn(q, pk, pv, page_table, starts, counts, window)
+    out = out.reshape(b, s_blk, plan.q_dim).astype(plan.dtype)
+
+    o_lin = _lin(plan, plan.q_dim, plan.d_model, plan.hash_o,
+                 (L.TP, L.FSDP))
+    return L.linear_apply(o_lin, params["o"], out), (pk, pv)
+
+
 def init_cache(plan: AttentionPlan, batch: int, max_len: int,
                dtype=jnp.bfloat16):
     shape = (batch, max_len, plan.num_kv_heads, plan.head_dim)

@@ -30,6 +30,19 @@ Design (vLLM-style, adapted to XLA's static-shape world):
   Chunked prefill is bitwise-identical to monolithic prefill (each query
   attends over the same full-width cache buffer either way; pinned in
   tests/test_kernels.py).
+- **Batched ragged prefill** (``batched_prefill=True``, the default on
+  paged decoder kinds): all rows mid-prefill advance in ONE ragged
+  dispatch per tick (`kernels/flash_prefill`) — per-row start/length
+  ride as scalars, shared-prefix pages are read through the page table,
+  and fresh K/V lands straight in each row's private pages, no batch=1
+  scratch-cache round trip.  Rows group by the same fixed compile-shape
+  bucket menu as sequential chunking (the row count pads to a power of
+  two); non-chunkable rows (extras, non-decoder kinds) fall back to the
+  sequential path.  Emitted tokens are bitwise identical to sequential
+  chunked prefill: every sublayer is row-wise for batch >= 2, the
+  attention oracle mirrors the dense path op for op, and the LM head
+  runs per completing row at the same M=1 dispatch shape
+  (``model.logits_head``) — pinned in tests/test_serving_fuzz.py.
 - Recurrent / encoder-decoder kinds (rwkv, zamba, encdec) keep the
   dense fixed-row cache (recurrent state is O(1) per row; paging buys
   nothing there).
@@ -74,6 +87,17 @@ from repro.serving.api import (FINISH_DEADLINE, FINISH_LENGTH, FINISH_STOP,
 from repro.serving.paged_cache import TRASH_PAGE, PagedKVCache
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
+# Clock discipline: every DURATION and DEADLINE (queue wait, TTFT,
+# latency, tick/chunk timing, scheduler expiry) comes off the monotonic
+# clock — wall time (`time.time`) steps under NTP/manual adjustment,
+# which used to skew engine.ttft_s / engine.queue_wait_s (the old
+# ``max(.., 0.0)`` clamps silently hid negative deltas) and could
+# spuriously expire — or immortalize — deadlined requests.  Wall time
+# survives only as the user-facing ``*_time`` timestamps on Request.
+# Module-level indirections so tests can monkeypatch a stepping clock.
+_now_wall = time.time
+_now_mono = time.monotonic
+
 
 @dataclasses.dataclass
 class Request:
@@ -88,10 +112,18 @@ class Request:
     done: bool = False
     extras: Optional[Dict[str, Any]] = None   # frames / image_embeds
     status: str = "new"       # queued/prefilling/running/preempted/done/...
+    # wall-clock timestamps: user-facing only (logs, dashboards) —
+    # NEVER subtracted from each other
     submit_time: Optional[float] = None
     first_admit_time: Optional[float] = None
     first_token_time: Optional[float] = None
     finish_time: Optional[float] = None
+    # monotonic-clock marks: the source for every reported duration
+    # (queue wait, TTFT, latency) and for scheduler deadline expiry
+    submit_mono: Optional[float] = None
+    first_admit_mono: Optional[float] = None
+    first_token_mono: Optional[float] = None
+    finish_mono: Optional[float] = None
     preemptions: int = 0
     truncated: bool = False             # force-retired at max_len
     finish_reason: Optional[str] = None       # stop / length / deadline
@@ -228,6 +260,7 @@ class Engine:
                  attn_impl: str = "ref", paged: Optional[bool] = None,
                  prefix_cache: bool = False,
                  prefill_chunk: Optional[int] = None,
+                 batched_prefill: bool = True,
                  max_logprobs: int = 8,
                  metrics: Optional[MetricsRegistry] = None,
                  tracer: Optional[Tracer] = None,
@@ -246,6 +279,12 @@ class Engine:
         (radix tree + refcounts + COW); ``prefill_chunk`` prefills long
         prompts N tokens per tick interleaved with decode (None =
         monolithic).  Both require the paged backend.
+        ``batched_prefill`` (default on) coalesces every chunkable row's
+        prefill step into ONE ragged dispatch per tick over the paged
+        pool (`kernels/flash_prefill` via ``model.prefill_paged``) —
+        token-bitwise-identical to the sequential path; ignored when the
+        model has no ``prefill_paged`` (MoE, non-decoder kinds) or the
+        backend isn't paged.
 
         ``max_logprobs`` caps the per-token top-K logprob report any
         request may ask for (the fused sampler computes top-K once per
@@ -325,6 +364,12 @@ class Engine:
         self._h_qwait = self.metrics.histogram("engine.queue_wait_s")
         self._h_tick = self.metrics.histogram("engine.decode_tick_s")
         self._h_chunk = self.metrics.histogram("engine.prefill_chunk_s")
+        # batched ragged prefill: dispatches = fused calls, rows/tokens =
+        # work coalesced per call, fallback_chunks = rows that took the
+        # sequential path (non-chunkable kinds, or batching off)
+        self._pb_counts = self.metrics.group("engine.prefill_batch", keys=(
+            "dispatches", "rows", "tokens", "fallback_chunks"))
+        self._h_pbatch = self.metrics.histogram("engine.prefill_batch_s")
         self._leak_anomalies = self.metrics.counter("kv.leak_anomalies")
         self.last_leak_error: Optional[str] = None
 
@@ -353,6 +398,21 @@ class Engine:
             self._page_copy = jax.jit(_copy_pages, donate_argnums=(0,))
             self._gather = jax.jit(_gather_prefix)
             self._cow_copy = jax.jit(_copy_page, donate_argnums=(0,))
+            # batched ragged prefill: one fused dispatch advances every
+            # chunkable row's current chunk straight into its private
+            # pages.  It returns the last-real-slot HIDDEN state; the
+            # LM head runs separately per completing row at batch=1 —
+            # the same M=1 GEMM dispatch the sequential path uses, so
+            # sampled logits are bitwise identical (M=1 GEMV lowering
+            # differs from M>=2 rows, which all agree with each other).
+            self.batched_prefill = bool(batched_prefill) \
+                and model.prefill_paged is not None
+            if self.batched_prefill:
+                self._prefill_batched = jax.jit(
+                    lambda p, t, pg, tb, st, cn, wf: model.prefill_paged(
+                        p, t, pg, tb, st, cn, wf, attn_impl),
+                    donate_argnums=(2,))
+                self._logits_head = jax.jit(model.logits_head)
             self.spec = None
             if draft is not None:
                 if model.decode_paged_block is None \
@@ -368,6 +428,7 @@ class Engine:
                 raise ValueError("speculative decoding requires the "
                                  "paged backend (decoder kinds)")
             self.spec = None
+            self.batched_prefill = False
             self.max_len = max_len
             self.cache = model.init_cache(rows, max_len)
             # per-row write positions: every row decodes at its own index
@@ -449,11 +510,12 @@ class Engine:
                 self._counts["failed"] += 1
                 self._failed.append(req)
                 return RequestHandle(self, req, accepted=False)
-        if not self.sched.submit(req, time.time()):
+        if not self.sched.submit(req, _now_mono()):
             req.status = "rejected"
             self._counts["failed"] += 1
             self._failed.append(req)
             return RequestHandle(self, req, accepted=False)
+        req.submit_time = _now_wall()
         if req.seed_used is None:
             # the effective PRNG stream seed: explicit, or drawn from
             # the engine's seeded stream (deterministic in submit order)
@@ -509,16 +571,19 @@ class Engine:
         """Advance in-flight chunked prefills, then start new ones
         (continuous batching).  At most ``max_prefills_per_tick`` chunk
         steps run per tick — the prefill/decode interleave budget.
+        With ``batched_prefill`` the advancing rows' chunks coalesce
+        into one ragged dispatch per compile bucket instead of one
+        dispatch each; budget accounting (chunk steps) is identical.
         Returns the number of chunk steps taken."""
         budget = self.sched.cfg.max_prefills_per_tick
-        chunks = 0
-        for row in sorted(self._prefilling,
-                          key=lambda r: self._row_seq[r]):
-            if chunks >= budget:
-                return chunks
-            self._advance_prefill(row)
-            chunks += 1
-        while chunks < budget:
+        n_inflight = len(self._prefilling)
+        advancing = sorted(self._prefilling,
+                           key=lambda r: self._row_seq[r])[:budget]
+        chunks = self._advance_rows(advancing)
+        if n_inflight > budget:
+            return chunks        # budget exhausted mid-flight
+        admitted: List[int] = []
+        while chunks + len(admitted) < budget:
             free = self._free_rows()
             if not free:
                 break
@@ -530,14 +595,22 @@ class Engine:
                 # and reclaimable pages may overlap); put the head back
                 self.sched.unpop(req)
                 break
-            chunks += 1
-        return chunks
+            admitted.append(free[0])
+        # newly admitted rows take their first chunk TOGETHER — the
+        # burst-arrival case (N submissions land in one tick) coalesces
+        # into one ragged dispatch instead of N single-row ones.  Dense
+        # (non-paged) rows finished inside _begin_prefill and are not
+        # in _prefilling, so they drop out here but still count.
+        self._advance_rows([r for r in admitted if r in self._prefilling])
+        return chunks + len(admitted)
 
     # ------------------------------------------------------------------
     def _begin_prefill(self, row: int, req: Request, now: float) -> bool:
-        """Bind a row: allocate/share pages, seed the scratch cache from
-        any prefix hit, and run the first chunk.  False if the pool came
-        up short (caller re-queues)."""
+        """Bind a row: allocate/share pages and seed the scratch cache
+        from any prefix hit.  The caller batches the first chunk step
+        (``_admit`` advances all same-tick admissions as one ragged
+        dispatch).  False if the pool came up short (caller
+        re-queues)."""
         if not self.paged:
             self._prefill_into_dense(row, req, now)
             return True
@@ -547,8 +620,24 @@ class Engine:
         if not self.kv.admit_row(row, target, token_ids=ids):
             return False
         hit = self.kv.row_meta[row].hit_tokens
+        chunkable = self._can_bucket(req)
         cache = None
-        if hit > 0:
+        if hit > 0 and self.batched_prefill and chunkable:
+            # batched path: no scratch cache to seed — the ragged kernel
+            # reads the shared prefix through the page table.  Only the
+            # partial boundary page needs a private replica: its hit
+            # bytes below ``hit`` are read but never recomputed (chunks
+            # start at ``hit``; slide-back rewrites are bitwise equal).
+            meta = self.kv.row_meta[row]
+            if meta.tail_page is not None:
+                dst = int(self.kv.table[row, meta.shared])
+                self.pages = self._cow_copy(
+                    self.pages, jnp.asarray(meta.tail_page, jnp.int32),
+                    jnp.asarray(dst, jnp.int32))
+                # copy dispatched; device ordering keeps it ahead of any
+                # later pool write, so the pin can drop now
+                self.kv.drop_tail_ref(row)
+        elif hit > 0:
             pids = self.kv.gather_table(row)
             cache = self._gather(self.pages, jnp.asarray(pids),
                                  jnp.asarray(hit, jnp.int32))
@@ -557,7 +646,7 @@ class Engine:
             self.kv.drop_tail_ref(row)
         self._prefilling[row] = _Prefill(
             req=req, feed=feed, target=target, pos=hit, cache=cache,
-            chunkable=self._can_bucket(req))
+            chunkable=chunkable)
         self.rows[row] = req
         # (re)bind the row's sampling state: pure function of the
         # request's (params, prompt, tokens), so a preempted request
@@ -567,7 +656,6 @@ class Engine:
         self._row_seq[row] = self._seq
         req.status = "prefilling"
         self._note_admitted(req, now, hit_tokens=hit)
-        self._advance_prefill(row)
         return True
 
     def _note_admitted(self, req: Request, now: float, *,
@@ -577,10 +665,10 @@ class Engine:
         if self.tracer.enabled:
             self.tracer.end(REQUEST_PID, req.uid, "queued",
                             hit_tokens=hit_tokens)
-        if req.first_admit_time is None:
-            req.first_admit_time = now
-            self._h_qwait.observe(
-                max(now - (req.submit_time or now), 0.0))
+        if req.first_admit_mono is None:
+            req.first_admit_mono = now
+            req.first_admit_time = _now_wall()
+            self._h_qwait.observe(now - (req.submit_mono or now))
 
     def _chunk_shape(self, pos: int, c: int):
         """Compile shape for a chunk of c tokens at cached position pos:
@@ -609,7 +697,13 @@ class Engine:
         if mult <= room:
             return pos, mult, c
         b = min(-(-c // 8) * 8, pos + c)     # slide-back: 8-grid bucket
-        return pos + c - b, b, b
+        start = pos + c - b
+        # the docstring's contract, re-checked on THIS branch too: holds
+        # because pos + c <= target <= max_len, but an out-of-range
+        # write would silently shift (dynamic_update clamping), so fail
+        # loudly instead
+        assert start + b <= self.max_len, (start, b, self.max_len)
+        return start, b, b
 
     def _advance_prefill(self, row: int) -> None:
         """One chunk step: compute ``c`` more feed positions against the
@@ -662,26 +756,127 @@ class Engine:
                                  tr0, start=pos0, end=st.pos)
         if st.pos < st.target:
             return
-        # prefill complete: publish the feed's full pages for reuse (the
-        # partial boundary page is published at release, once decode
-        # stops writing it), sample the first token, start decoding
-        del self._prefilling[row]
+        self._complete_prefill(row, logits[:, -1])
+
+    def _complete_prefill(self, row: int, last_logits) -> None:
+        """Prefill complete: publish the feed's full pages for reuse
+        (the partial boundary page is published at release, once decode
+        stops writing it), sample the first token off ``last_logits``
+        ((1, V) last-real-position logits), and hand the row to
+        decode."""
+        st = self._prefilling.pop(row)
+        req = st.req
         ids = self._prefix_ids(req)
         if ids is not None:
             full = (st.target // self.kv.page_size) * self.kv.page_size
             self.kv.index_row(row, ids, full)
         req.status = "running"
-        res = self._run_sampler(logits[:, -1], slice(row, row + 1),
+        res = self._run_sampler(last_logits, slice(row, row + 1),
                                 "prefill")
         self._commit_token(row, req, res, 0)
         self._note_first_token(req)
 
+    def _advance_rows(self, rows_: List[int]) -> int:
+        """Advance each row's prefill by one chunk step.  Chunkable rows
+        coalesce into one ragged dispatch per compile bucket
+        (``batched_prefill``); the rest take the sequential scratch-cache
+        path.  Completions are processed in admission order either way,
+        so sampler dispatch order — and thus every observable — matches
+        the sequential engine.  Returns the number of chunk steps."""
+        if not (self.batched_prefill and len(rows_) > 0):
+            for row in rows_:
+                self._advance_prefill(row)
+            return len(rows_)
+        groups: Dict[int, List[Tuple[int, int, int]]] = {}
+        for row in rows_:
+            st = self._prefilling[row]
+            if not st.chunkable:
+                self._pb_counts["fallback_chunks"] += 1
+                self._advance_prefill(row)
+                continue
+            remaining = len(st.feed) - st.pos
+            c = remaining if self.prefill_chunk is None \
+                else min(self.prefill_chunk, remaining)
+            start, bucket, real = self._chunk_shape(st.pos, c)
+            groups.setdefault(bucket, []).append((row, start, real))
+        done: Dict[int, Any] = {}
+        for bucket in sorted(groups):
+            self._dispatch_prefill_batch(bucket, groups[bucket], done)
+        for row in rows_:            # admission order, like sequential
+            if row in done:
+                self._complete_prefill(row, done[row])
+        return len(rows_)
+
+    def _dispatch_prefill_batch(self, bucket: int,
+                                entries: List[Tuple[int, int, int]],
+                                done: Dict[int, Any]) -> None:
+        """ONE ragged dispatch advancing every (row, start, real) entry
+        by its current chunk: queries at positions [start, start+real)
+        per row, fresh K/V scattered straight into the row's private
+        pages, shared-prefix pages read through the page table.  The row
+        count pads to a power of two (row-wise parity holds for any
+        batch >= 2, so padding rows are free).  Rows that reach target
+        stash their (1, V) last-position logits in ``done`` for ordered
+        completion by the caller."""
+        t0 = time.perf_counter()
+        tr0 = self.tracer.now()
+        n = len(entries)
+        n_pad = max(2, 1 << (n - 1).bit_length())
+        toks = np.zeros((n_pad, bucket), np.int32)
+        starts = np.zeros((n_pad,), np.int32)
+        counts = np.zeros((n_pad,), np.int32)
+        wfrom = np.zeros((n_pad,), np.int32)
+        tables = np.full((n_pad, self.kv.maxp), TRASH_PAGE, np.int32)
+        for j, (row, start, real) in enumerate(entries):
+            st = self._prefilling[row]
+            toks[j, :real] = st.feed[start:start + real]
+            starts[j] = start
+            counts[j] = real
+            # write protection: positions below the first private page
+            # (shared prefix) — or below this chunk's landing floor —
+            # must not be rewritten; slide-back recomputes land bitwise-
+            # equal bytes so rewriting them above the floor is safe
+            lo = max(st.pos // self.kv.page_size,
+                     self.kv.first_private_page(row))
+            wfrom[j] = lo * self.kv.page_size
+            tables[j] = self.kv.table[row]
+        x_last, self.pages = self._prefill_batched(
+            self.params, jnp.asarray(toks), self.pages,
+            jnp.asarray(tables), jnp.asarray(starts),
+            jnp.asarray(counts), jnp.asarray(wfrom))
+        dt = time.perf_counter() - t0
+        self._pb_counts["dispatches"] += 1
+        self._pb_counts["rows"] += n
+        self._pb_counts["tokens"] += int(counts.sum())
+        self._h_pbatch.observe(dt)
+        if self.tracer.enabled:
+            self.tracer.complete(ENGINE_PID, 0, "prefill_batch", tr0,
+                                 rows=n, bucket=bucket)
+        for j, (row, start, real) in enumerate(entries):
+            st = self._prefilling[row]
+            pos0 = st.pos
+            st.pos = start + real
+            # the chunk histogram keeps per-row-step count semantics
+            # (one observation per chunk step, like the sequential
+            # path); the batch histogram carries the fused wall time
+            self._h_chunk.observe(dt)
+            if self.tracer.enabled:
+                self.tracer.complete(REQUEST_PID, st.req.uid,
+                                     "prefill_chunk", tr0,
+                                     start=pos0, end=st.pos)
+            if st.pos >= st.target:
+                # per-row LM head at the sequential path's exact M=1
+                # dispatch shape (see __init__: bitwise parity)
+                done[row] = self._logits_head(
+                    self.params, x_last[j:j + 1])[:, -1]
+
     def _note_first_token(self, req: Request) -> None:
-        if req.first_token_time is None:
-            req.first_token_time = time.time()
-            self._h_ttft.observe(max(
-                req.first_token_time
-                - (req.submit_time or req.first_token_time), 0.0))
+        if req.first_token_mono is None:
+            req.first_token_mono = _now_mono()
+            req.first_token_time = _now_wall()
+            self._h_ttft.observe(
+                req.first_token_mono
+                - (req.submit_mono or req.first_token_mono))
             if self.tracer.enabled:
                 self.tracer.instant(REQUEST_PID, req.uid, "first_token")
 
@@ -809,7 +1004,8 @@ class Engine:
         req.finish_reason = reason
         self._counts["done"] += 1
         self._finish_counts[reason] += 1
-        req.finish_time = time.time()
+        req.finish_mono = _now_mono()
+        req.finish_time = _now_wall()
         if self.tracer.enabled:
             self.tracer.end(REQUEST_PID, req.uid, "request",
                             finish=reason, tokens=len(req.tokens or ()))
@@ -869,7 +1065,7 @@ class Engine:
         return decoded
 
     def _step_inner(self) -> int:
-        now = time.time()
+        now = _now_mono()
         for r in self.sched.expire(now):
             r.status = "expired"       # scheduler set finish_reason
             self._counts["failed"] += 1
@@ -1011,10 +1207,12 @@ class Engine:
                 self.last_leak_error = str(e)
 
     def stats(self) -> Dict[str, Any]:
-        lat = [r.finish_time - r.submit_time for r in self._done
-               if r.finish_time and r.submit_time]
-        ttft = [r.first_token_time - r.submit_time for r in self._done
-                if r.first_token_time and r.submit_time]
+        # durations off the monotonic marks — NTP-step immune (the wall
+        # *_time fields are display timestamps, never subtracted)
+        lat = [r.finish_mono - r.submit_mono for r in self._done
+               if r.finish_mono and r.submit_mono]
+        ttft = [r.first_token_mono - r.submit_mono for r in self._done
+                if r.first_token_mono and r.submit_mono]
         out = {
             "done": len(self._done),
             "failed": len(self._failed),

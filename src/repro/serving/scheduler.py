@@ -76,11 +76,15 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     def submit(self, req, now: float) -> bool:
-        """Enqueue; False = rejected by backpressure (queue full)."""
+        """Enqueue; False = rejected by backpressure (queue full).
+
+        ``now`` is a MONOTONIC-clock reading: it feeds the deadline
+        check in ``expire`` and the queue-wait histogram, so a wall
+        clock (NTP-steppable) here would corrupt both."""
         if len(self) >= self.cfg.max_queue:
             self.counters["queue_rejected"] += 1
             return False
-        req.submit_time = now
+        req.submit_mono = now
         self._classes.setdefault(self._class(req), deque()).append(req)
         self.counters["submitted"] += 1
         return True
@@ -102,19 +106,21 @@ class Scheduler:
         """Remove and return queued requests past the queue deadline.
 
         The deadline bounds the wait *before first admission* only: a
-        preempted request re-enters with its original submit_time, but
+        preempted request re-enters with its original submit_mono, but
         it already served tokens — expiring it would silently discard
         them, so anything ever admitted is exempt.  Expired requests
         get ``finish_reason = "deadline"`` (the streaming API's
-        terminal marker) here, where the expiry decision is made."""
+        terminal marker) here, where the expiry decision is made.
+        Deadlines compare monotonic marks — a wall-clock step can
+        neither spuriously expire nor immortalize a queued request."""
         if self.cfg.deadline_s is None:
             return []
         dead = []
         for q in self._classes.values():
             kept = deque()
             for r in q:
-                if getattr(r, "first_admit_time", None) is None \
-                        and now - r.submit_time > self.cfg.deadline_s:
+                if getattr(r, "first_admit_mono", None) is None \
+                        and now - r.submit_mono > self.cfg.deadline_s:
                     if hasattr(r, "finish_reason"):
                         r.finish_reason = FINISH_DEADLINE
                     dead.append(r)

@@ -441,12 +441,19 @@ def test_prefill_bucketing_single_compile_and_exact():
     _, m, params = _tiny_model()
     traces = [0]
     orig = m.prefill
+    orig_paged = m.prefill_paged
 
     def counting(p, b):
         traces[0] += 1
         return orig(p, b)
 
-    m2 = m._replace(prefill=counting)
+    def counting_paged(*a, **kw):
+        # batched ragged prefill is the default engine path; either
+        # entry point tracing more than once breaks the bucket pin
+        traces[0] += 1
+        return orig_paged(*a, **kw)
+
+    m2 = m._replace(prefill=counting, prefill_paged=counting_paged)
     prompts = [np.arange(n, dtype=np.int32) + 1 for n in (4, 7, 23, 12)]
     outs = generate_batch(m2, params, prompts, max_new_tokens=4,
                           max_len=96, slots=2, eos_id=-1)

@@ -444,6 +444,165 @@ def test_kernel_matches_core_paths():
 
 
 # ---------------------------------------------------------------------------
+# batched ragged flash-prefill (serving batched prefill path)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_prefill import paged_prefill_attention  # noqa: E402
+
+
+def _mk_ragged_prefill(seed, *, ps, maxp, n_kv, g, d, starts, counts,
+                       shared_pages=0, dtype=jnp.float32):
+    """Random pools + tables + a ragged (starts, counts) chunk layout.
+
+    Row b's chunk queries sit at positions [starts[b], starts[b]+counts[b]);
+    its full history [0, starts[b]+counts[b]) — old prefix AND the fresh
+    chunk's K/V — is already in the pool (the engine scatters the chunk
+    before attending).  With ``shared_pages`` the leading pages ALIAS one
+    physical page set across rows (prefix sharing / mid-COW layout)."""
+    starts = np.asarray(starts, np.int32)
+    counts = np.asarray(counts, np.int32)
+    b = len(starts)
+    s_blk = int(counts.max()) if counts.size else 1
+    rng = np.random.default_rng(seed)
+    num_pages = 1 + shared_pages + b * (maxp - shared_pages)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    pk = jax.random.normal(ks[0], (num_pages, ps, n_kv, d)).astype(dtype)
+    pv = jax.random.normal(ks[1], (num_pages, ps, n_kv, d)).astype(dtype)
+    q = jax.random.normal(ks[2], (b, s_blk, n_kv * g, d)).astype(dtype)
+    table = np.zeros((b, maxp), np.int32)
+    pool = list(range(1 + shared_pages, num_pages))
+    rng.shuffle(pool)
+    for i in range(b):
+        table[i, :shared_pages] = np.arange(1, 1 + shared_pages)
+        for j in range(shared_pages, maxp):
+            table[i, j] = pool.pop()
+    return (q, pk, pv, jnp.asarray(table), jnp.asarray(starts),
+            jnp.asarray(counts))
+
+
+def _dense_prefill_oracle(q, pk, pv, table, starts, counts, window=0):
+    """Row-by-row dense oracle through ATT.attend (the path the serving
+    parity tests trust): gather each row's pages to a dense cache and
+    attend its real chunk queries with causal + length masking."""
+    from repro.nn import attention as ATT
+    b, s_blk, hq, d = q.shape
+    _, ps, n_kv, _ = pk.shape
+    t = table.shape[1] * ps
+    plan = ATT.AttentionPlan(d_model=hq * d, num_heads=hq,
+                             num_kv_heads=n_kv, head_dim=d,
+                             dtype=q.dtype,
+                             sliding_window=int(window))
+    outs = np.zeros((b, s_blk, hq, d), np.float32)
+    kv_pos = jnp.arange(t)
+    for i in range(b):
+        n = int(counts[i])
+        if n == 0:
+            continue
+        kd = jnp.take(pk, table[i], axis=0).reshape(1, t, n_kv, d)
+        vd = jnp.take(pv, table[i], axis=0).reshape(1, t, n_kv, d)
+        q_pos = int(starts[i]) + jnp.arange(n)
+        kv_valid = kv_pos < int(starts[i]) + n
+        o = ATT.attend(plan, q[i:i + 1, :n], kd, vd, q_pos, kv_pos,
+                       kv_valid)
+        outs[i, :n] = np.asarray(o, np.float32).reshape(n, hq, d)
+    return outs
+
+
+_PS_RAGGED = 8
+_RAGGED_CASES = [
+    # counts sweep: 1, ps-1, ps, 3*ps, ragged mixes; starts exercise
+    # page-offset rags (mid-page, boundary, zero)
+    ([0, 0, 0], [1, _PS_RAGGED - 1, _PS_RAGGED]),
+    ([0], [3 * _PS_RAGGED]),
+    ([5, 8, 0, 13], [7, 9, 24, 1]),
+    ([3, 17, 10], [1, 6, 22]),
+]
+
+
+@pytest.mark.parametrize("starts,counts", _RAGGED_CASES)
+@pytest.mark.parametrize("g,dtype", [(1, jnp.float32), (2, jnp.float32),
+                                     (4, jnp.bfloat16)])
+def test_flash_prefill_kernel_vs_ref_vs_dense(starts, counts, g, dtype):
+    """Ragged chunk layouts: Pallas kernel vs paged_prefill_ref (must be
+    close) and ref vs the dense attend oracle, across GQA groups and
+    dtypes.  Pad slots must come back zero."""
+    q, pk, pv, table, st_, cn = _mk_ragged_prefill(
+        11 + g + len(counts), ps=_PS_RAGGED, maxp=4, n_kv=2, g=g, d=16,
+        starts=starts, counts=counts, dtype=dtype)
+    want = ref.paged_prefill_ref(q, pk, pv, table, st_, cn)
+    got = paged_prefill_attention(q, pk, pv, table, st_, cn,
+                                  interpret=True)
+    rtol, atol = _tol(dtype)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=rtol, atol=atol)
+    dense = _dense_prefill_oracle(q, pk, pv, table, st_, cn)
+    b, s_blk, hq, d = q.shape
+    wantf = np.asarray(want, np.float32)
+    for i in range(b):
+        n = int(cn[i])
+        np.testing.assert_allclose(wantf[i, :n], dense[i, :n],
+                                   rtol=rtol, atol=atol,
+                                   err_msg=f"row {i} vs dense")
+        np.testing.assert_array_equal(wantf[i, n:], 0.0,
+                                      err_msg=f"row {i} pad slots")
+
+
+@pytest.mark.parametrize("window", [1, 3, 8])
+def test_flash_prefill_sliding_window(window):
+    """Windowed masking parity on ragged chunks (gemma local layers)."""
+    q, pk, pv, table, st_, cn = _mk_ragged_prefill(
+        31 + window, ps=4, maxp=4, n_kv=2, g=2, d=8,
+        starts=[0, 6, 9], counts=[5, 2, 7])
+    want = ref.paged_prefill_ref(q, pk, pv, table, st_, cn, window)
+    got = paged_prefill_attention(q, pk, pv, table, st_, cn,
+                                  jnp.int32(window), interpret=True)
+    rtol, atol = _tol(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=rtol, atol=atol)
+    dense = _dense_prefill_oracle(q, pk, pv, table, st_, cn, window)
+    for i in range(len(cn)):
+        n = int(cn[i])
+        np.testing.assert_allclose(np.asarray(want, np.float32)[i, :n],
+                                   dense[i, :n], rtol=rtol, atol=atol)
+
+
+def test_flash_prefill_shared_prefix_mid_cow():
+    """Rows whose leading pages alias the same physical pages (prefix
+    sharing; the engine resolves the boundary page via COW before the
+    dispatch): reads through the aliases must match a dense gather of
+    each row's table, and empty (count==0) padding rows stay zero."""
+    q, pk, pv, table, st_, cn = _mk_ragged_prefill(
+        43, ps=4, maxp=4, n_kv=2, g=2, d=16,
+        starts=[8, 8, 11, 0], counts=[5, 3, 2, 0], shared_pages=2)
+    want = ref.paged_prefill_ref(q, pk, pv, table, st_, cn)
+    got = paged_prefill_attention(q, pk, pv, table, st_, cn,
+                                  interpret=True)
+    rtol, atol = _tol(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=rtol, atol=atol)
+    dense = _dense_prefill_oracle(q, pk, pv, table, st_, cn)
+    wantf = np.asarray(want, np.float32)
+    for i in range(len(cn)):
+        n = int(cn[i])
+        np.testing.assert_allclose(wantf[i, :n], dense[i, :n],
+                                   rtol=rtol, atol=atol)
+    np.testing.assert_array_equal(wantf[3], 0.0)
+    assert np.isfinite(np.asarray(got, np.float32)).all()
+
+
+def test_chunk_shape_slide_back_stays_in_bounds():
+    """The 8-grid slide-back must honor start + bucket <= max_len for
+    prefix-hit offsets landing within 8 tokens of max_len (the regime
+    where a naive pos + c - b rewind could overrun)."""
+    for pos in range(_CHUNK_MAX_LEN - 8, _CHUNK_MAX_LEN):
+        for c in range(1, _CHUNK_MAX_LEN - pos + 1):
+            start, bucket, real = _chunk_shape(pos, c, chunk=None)
+            assert start + bucket <= _CHUNK_MAX_LEN, (pos, c, start, bucket)
+            assert start <= pos and start + real == pos + c, (pos, c)
+
+
+# ---------------------------------------------------------------------------
 # sampling filters: radix-select top-k kernel + top-p / min-p vs oracles
 # ---------------------------------------------------------------------------
 

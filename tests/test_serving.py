@@ -33,7 +33,7 @@ class _Req:
     def __init__(self, uid, priority=0):
         self.uid = uid
         self.priority = priority
-        self.submit_time = None
+        self.submit_mono = None
 
 
 # ---------------------------------------------------------------------------
@@ -173,7 +173,7 @@ def test_scheduler_deadline_spares_preempted_requests():
     r = _Req(0)
     sched.submit(r, now=0.0)
     got = sched.pop_admissible(lambda q: True)
-    got.first_admit_time = 0.1                    # engine admitted it
+    got.first_admit_mono = 0.1                    # engine admitted it
     sched.requeue(got)                            # preempted much later
     assert sched.expire(now=10.0) == []
     assert sched.pop_admissible(lambda q: True) is r
@@ -317,6 +317,72 @@ def test_submit_rejects_never_fitting_request(tiny):
     assert eng.submit(ok)
     done = eng.run()
     assert [r.uid for r in done] == [1]
+
+
+def test_wall_clock_steps_do_not_skew_durations(tiny, monkeypatch):
+    """NTP-style wall-clock steps (time.time jumping BACKWARDS between
+    reads) must not skew queue-wait/TTFT/latency: every duration comes
+    off the monotonic clock.  The old wall-clock arithmetic clamped the
+    negative deltas to 0 — hiding the skew instead of being immune."""
+    from repro.serving import engine as engine_mod
+    m, params = tiny
+    wall = {"t": 10_000.0}
+
+    def stepping_wall():
+        wall["t"] -= 97.0            # a hard backwards step every read
+        return wall["t"]
+
+    monkeypatch.setattr(engine_mod, "_now_wall", stepping_wall)
+    eng = Engine(m, params, max_concurrency=2, max_len=64, eos_id=-1,
+                 page_size=8)
+    rng = np.random.default_rng(5)
+    reqs = [Request(uid=i, prompt=_prompt(rng), max_new_tokens=4)
+            for i in range(3)]
+    for r in reqs:
+        assert eng.submit(r)
+    done = eng.run()
+    assert len(done) == 3
+    for r in done:
+        # monotonic marks stay ordered however the wall clock thrashes
+        assert (r.submit_mono <= r.first_admit_mono
+                <= r.first_token_mono <= r.finish_mono)
+        # wall timestamps still populated — they are display-only
+        assert r.submit_time is not None and r.finish_time is not None
+    stats = eng.stats()
+    assert stats["latency_p50_s"] >= 0.0
+    assert stats["ttft_p50_s"] >= 0.0 and stats["ttft_mean_s"] >= 0.0
+    snap = eng.metrics.snapshot()
+    for h in ("engine.ttft_s", "engine.queue_wait_s"):
+        assert snap[h]["count"] == 3 and snap[h]["min"] >= 0.0, h
+
+
+def test_deadline_expiry_immune_to_wall_clock_steps(tiny, monkeypatch):
+    """Queue-deadline expiry keys off the monotonic clock: a wall-clock
+    step can neither spuriously expire a fresh request nor immortalize
+    an overdue one.  The mono clock is driven directly; the wall clock
+    is pinned to nonsense to prove it is irrelevant."""
+    from repro.serving import engine as engine_mod
+    mono = {"t": 0.0}
+    monkeypatch.setattr(engine_mod, "_now_mono", lambda: mono["t"])
+    monkeypatch.setattr(engine_mod, "_now_wall", lambda: -1e9)
+    m, params = tiny
+    eng = Engine(m, params, max_concurrency=1, max_len=64, eos_id=-1,
+                 page_size=8,
+                 scheduler=SchedulerConfig(deadline_s=5.0, max_queue=8))
+    rng = np.random.default_rng(7)
+    a = Request(uid=0, prompt=_prompt(rng), max_new_tokens=8)
+    b = Request(uid=1, prompt=_prompt(rng), max_new_tokens=2)
+    assert eng.submit(a)                     # submit_mono = 0.0
+    mono["t"] = 1.0
+    assert eng.submit(b)                     # queued behind a
+    mono["t"] = 2.0
+    eng.step()                               # b waited 1s < 5s: kept
+    assert b.status == "queued"
+    mono["t"] = 7.0
+    eng.step()                               # b waited 6s > 5s: expired
+    assert b.status == "expired" and b.finish_reason == "deadline"
+    eng.run()
+    assert a.done and len(a.tokens) == 8     # a unaffected throughout
 
 
 # ---------------------------------------------------------------------------

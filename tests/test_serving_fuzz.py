@@ -108,10 +108,12 @@ def _workload(rng):
 
 
 def _run(m, params, prompts, prios, max_new, *, prefix, chunk, num_pages,
-         deadline=None, sampling=None, draft=None, spec_k=3):
+         deadline=None, sampling=None, draft=None, spec_k=3,
+         batched=True):
     eng = Engine(m, params, max_concurrency=3, max_len=MAX_LEN, eos_id=-1,
                  page_size=PAGE, num_pages=num_pages, prefix_cache=prefix,
                  prefill_chunk=chunk, draft=draft, spec_k=spec_k,
+                 batched_prefill=batched,
                  scheduler=SchedulerConfig(policy="priority", max_queue=64,
                                            deadline_s=deadline))
     reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new,
@@ -147,8 +149,14 @@ def _check_one(tiny, seed):
     off, acc_off, _, _ = _run(m, params, prompts, prios, max_new,
                               prefix=False, chunk=None,
                               num_pages=num_pages)
-    assert acc_on == acc_off == set(range(len(prompts)))
+    # sequential (batched_prefill=False) arm: the batched ragged
+    # dispatch (the default above) must be bitwise inert
+    seq, acc_seq, _, _ = _run(m, params, prompts, prios, max_new,
+                              prefix=True, chunk=chunk,
+                              num_pages=num_pages, batched=False)
+    assert acc_on == acc_off == acc_seq == set(range(len(prompts)))
     assert on == off, (on, off, chunk, num_pages)
+    assert on == seq, (on, seq, chunk, num_pages)
     batch = generate_batch(m, params, prompts, max_new_tokens=max_new,
                            max_len=MAX_LEN, slots=3, eos_id=-1,
                            page_size=PAGE, num_pages=num_pages)
@@ -166,18 +174,21 @@ def test_fuzz_prefix_on_off_batch_token_identical(tiny, seed):
 @settings(max_examples=SLOW_EXAMPLES, deadline=None)
 @given(seed=st.integers(10 ** 6, 2 * 10 ** 6))
 def test_fuzz_full_sweep(tiny, seed):
-    """Full sweep: same property, fresh seed range, and every chunk
-    size against the same workload."""
+    """Full sweep: same property, fresh seed range, every chunk size,
+    and the batched-prefill on/off axis against the same workload."""
     m, params = tiny
     rng = np.random.default_rng(seed)
     prompts, prios, max_new = _workload(rng)
     num_pages = int(rng.integers(8, 26))
     outs = []
-    for prefix, chunk in [(False, None), (True, None), (True, 1),
-                          (True, 3), (True, PAGE), (True, 3 * PAGE)]:
+    for prefix, chunk, batched in [
+            (False, None, True), (True, None, True), (True, 1, True),
+            (True, 3, True), (True, PAGE, True), (True, 3 * PAGE, True),
+            (False, None, False), (True, 3, False),
+            (True, 3 * PAGE, False)]:
         toks, acc, _, _ = _run(m, params, prompts, prios, max_new,
                                prefix=prefix, chunk=chunk,
-                               num_pages=num_pages)
+                               num_pages=num_pages, batched=batched)
         outs.append(toks)
         assert acc == set(range(len(prompts)))
     assert all(o == outs[0] for o in outs[1:])
@@ -225,6 +236,11 @@ def test_fuzz_preemption_mid_chunked_prefill(tiny):
     tight, _, _, eng = _run(m, params, prompts, prios, 16, prefix=True,
                             chunk=4, num_pages=10)
     assert tight == full
+    # forced preemption mid-batched-prefill must also match the
+    # sequential (batched off) tight-pool run bitwise
+    tight_seq, _, _, _ = _run(m, params, prompts, prios, 16, prefix=True,
+                              chunk=4, num_pages=10, batched=False)
+    assert tight_seq == tight
     stats = eng.stats()
     assert stats["preemptions"] == eng._n_preempt > 0, \
         "pool sizing did not force a preemption"
@@ -274,9 +290,12 @@ def test_fuzz_seeded_sampling_token_identical(tiny, seed):
     on, acc_on, _, eng = _run(m, params, prompts, prios, max_new,
                               prefix=True, chunk=chunk,
                               num_pages=num_pages, sampling=sps)
+    # the off arm also runs batched_prefill=False: one comparison pins
+    # the prefix AND batched-ragged-prefill axes under sampled decode
     off, acc_off, _, _ = _run(m, params, prompts, prios, max_new,
                               prefix=False, chunk=None,
-                              num_pages=num_pages, sampling=sps)
+                              num_pages=num_pages, sampling=sps,
+                              batched=False)
     assert acc_on == acc_off == set(range(len(prompts)))
     assert on == off, (on, off, chunk, num_pages)
     # fully-provisioned batch (no preemption possible): same tokens —
