@@ -55,6 +55,9 @@ _EXACT_KEYS = {
     "hashed", "config", "tokens_match", "deterministic_rerun",
     "budget", "budget_target", "n_slots", "page_size",
     "spec_k", "draft_policy",
+    # sharded serving: mesh geometry is workload shape — a baseline
+    # produced on an 8-device host mesh must be gated on one
+    "devices", "tp",
 }
 # Deterministic-per-workload accounting: tight relative band.
 _TIGHT_KEYS = {
@@ -76,6 +79,10 @@ _TIGHT_KEYS = {
     "engine.prefill_batch.dispatches", "engine.prefill_batch.rows",
     "engine.prefill_batch.tokens",
     "engine.prefill_batch.fallback_chunks",
+    # sharded serving: dispatch counts are a pure function of the
+    # (deterministic, burst-arrival) workload shape
+    "shard_decode_dispatches", "shard_prefill_dispatches",
+    "engine.shard.decode_dispatches", "engine.shard.prefill_dispatches",
 }
 # Sections whose token streams are sampled / arrival-order dependent:
 # even "tokens" class keys degrade to PERF there (stop sequences fire

@@ -31,6 +31,12 @@ draft (`repro.serving.spec_decode`), reporting accept rate, tok/s for
 both arms, and a bitwise token-identity cross-check (speculation must
 never change what the engine emits).
 
+A **sharded** section benches tensor-parallel serving: the same burst
+workload runs on a single device and on a host-simulated mesh
+(``Engine(mesh=...)``, page pool + attention heads sharded over
+"model"), reporting tok/s for both arms, the sharded dispatch
+counters, and a bitwise token-identity cross-check.
+
 A fifth section measures **observability overhead**: the shared-prefix
 workload with the span tracer off vs on, reporting the throughput
 delta and a bitwise token-identity cross-check (tracing must never
@@ -115,14 +121,14 @@ def bench_level(model, params, cfg, *, concurrency: int, requests: int,
     # offered load: one request per gap, ~2x one row's sustained rate
     gap = 0.0 if requests <= concurrency else 0.01
     schedule = _requests(requests, cfg.vocab_size, max_new, gap)
-    t0 = time.time()
+    t0 = time.perf_counter()
     pending = list(schedule)
     while pending or eng.pending():
-        now = time.time() - t0
+        now = time.perf_counter() - t0
         while pending and pending[0][0] <= now:
             eng.submit(pending.pop(0)[1])
         eng.step()
-    wall = time.time() - t0
+    wall = time.perf_counter() - t0
     stats = eng.stats()
     d = _workload_delta(eng, base)
     total_tokens = d["engine.tokens"]
@@ -176,11 +182,11 @@ def bench_shared_prefix(model, params, cfg, *, concurrency: int,
 
         reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
                 for i, p in enumerate(prompts)]
-        t0 = time.time()
+        t0 = time.perf_counter()
         for r in reqs:
             eng.submit(r)
         eng.run()
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         eng.kv.leak_check()
         stats = eng.stats()
         d = _workload_delta(eng, base)
@@ -271,12 +277,12 @@ def bench_mixed_sampling(model, params, cfg, *, concurrency: int,
         eng.run()                  # an all-greedy batch, alone
         eng._done.clear()
         base = eng.metrics.snapshot()  # counter baseline: report deltas
-        t0 = time.time()
+        t0 = time.perf_counter()
         for uid, (prompt, sp, _) in enumerate(reqs_spec):
             eng.submit(Request(uid=uid, prompt=prompt.copy(),
                                sampling=sp))
         done = eng.run()
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         d = _workload_delta(eng, base)
         ticks = d["engine.ticks"]
         sampler_s = d["sampler.dispatch_s"]["sum"]
@@ -355,12 +361,12 @@ def bench_spec_decode(model, params, cfg, *, concurrency: int,
         eng.run()
         eng._done.clear()
         base = eng.metrics.snapshot()
-        t0 = time.time()
+        t0 = time.perf_counter()
         for uid, (prompt, sp) in enumerate(reqs_spec):
             eng.submit(Request(uid=uid, prompt=prompt.copy(),
                                sampling=sp))
         done = eng.run()
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         d = _workload_delta(eng, base)
         toks = {r.uid: list(r.tokens) for r in done}
         spec_stats = None
@@ -432,11 +438,11 @@ def bench_obs_overhead(model, params, cfg, *, concurrency: int,
         eng._done.clear()
         reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
                 for i, p in enumerate(prompts)]
-        t0 = time.time()
+        t0 = time.perf_counter()
         for r in reqs:
             eng.submit(r)
         eng.run()
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         tokens = sum(len(r.tokens) for r in reqs)
         return (round(tokens / wall, 2),
                 {r.uid: list(r.tokens) for r in reqs}, tracer)
@@ -507,11 +513,11 @@ def bench_prefill_batch(model, params, cfg, *, concurrency: int,
 
         reqs = [Request(uid=i, prompt=p.copy(), max_new_tokens=max_new)
                 for i, p in enumerate(prompts)]
-        t0 = time.time()
+        t0 = time.perf_counter()
         for r in reqs:               # the burst: all requests at t=0
             eng.submit(r)
         eng.run()
-        wall = time.time() - t0
+        wall = time.perf_counter() - t0
         eng.kv.leak_check()
         stats = eng.stats()
         d = _workload_delta(eng, base)
@@ -547,6 +553,88 @@ def bench_prefill_batch(model, params, cfg, *, concurrency: int,
           f"({row['ttft_speedup']}x), "
           f"{on['prefill_batch_dispatches']} fused dispatches / "
           f"{on['prefill_batch_rows']} row-chunks, "
+          f"match={row['tokens_match']}")
+    return row
+
+
+def bench_sharded(model, params, cfg, *, concurrency: int, requests: int,
+                  max_new: int, max_len: int, page_size: int) -> dict:
+    """Tensor-parallel serving: mesh engine vs single device.
+
+    The same burst workload (greedy + seeded top-p rows) runs once
+    without a mesh and once with ``Engine(mesh=...)`` sharding the page
+    pool and attention heads over the "model" axis; reports tok/s for
+    both arms, the sharded dispatch counters, and the section's reason
+    to exist: a bitwise token-identity cross-check (head-sharding with
+    an exact all-gather must never change what the engine emits).
+
+    CI provides the devices via a host-simulated mesh
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``); with one
+    device the section records the skip instead of failing.
+    """
+    ndev = jax.device_count()
+    tp = next((t for t in (8, 4, 2)
+               if t <= ndev and cfg.num_heads % t == 0
+               and cfg.num_kv_heads % t == 0), 1)
+    if ndev < 2 or tp < 2:
+        print(f"sharded: skipped (devices={ndev}, usable tp={tp})")
+        return {"skipped": True, "devices": ndev, "tp": tp}
+    from repro.launch.mesh import make_serving_mesh
+    mesh = make_serving_mesh(tp)
+
+    rng = np.random.default_rng(6)
+    reqs_spec = []
+    for uid in range(requests):
+        plen = int(rng.integers(4, 20))
+        prompt = rng.integers(2, cfg.vocab_size,
+                              size=plen).astype(np.int32)
+        sp = SamplingParams(max_tokens=max_new) if uid % 2 else \
+            SamplingParams(temperature=0.8, top_p=0.9, top_k=64,
+                           max_tokens=max_new, seed=3000 + uid)
+        reqs_spec.append((prompt, sp))
+
+    def run(m):
+        eng = Engine(model, params, max_concurrency=concurrency,
+                     max_len=max_len, eos_id=-1, page_size=page_size,
+                     mesh=m,
+                     scheduler=SchedulerConfig(max_queue=requests + 2))
+        # warmup compiles the prefill buckets + decode + both sampler
+        # specializations (all-greedy and mixed ticks)
+        eng.submit(Request(uid=-1, prompt=np.arange(6, dtype=np.int32) + 2,
+                           sampling=SamplingParams(
+                               temperature=0.7, top_p=0.9, top_k=64,
+                               max_tokens=2, seed=0)))
+        eng.submit(Request(uid=-2, prompt=np.arange(5, dtype=np.int32) + 2,
+                           max_new_tokens=2))
+        eng.run()
+        eng._done.clear()
+        base = eng.metrics.snapshot()
+        t0 = time.perf_counter()
+        for uid, (prompt, sp) in enumerate(reqs_spec):
+            eng.submit(Request(uid=uid, prompt=prompt.copy(),
+                               sampling=sp))
+        done = eng.run()
+        wall = time.perf_counter() - t0
+        d = _workload_delta(eng, base)
+        return (round(d["engine.tokens"] / wall, 2), round(wall, 3),
+                {r.uid: list(r.tokens) for r in done}, d)
+
+    single_tps, single_wall, toks_single, _ = run(None)
+    shard_tps, shard_wall, toks_shard, d = run(mesh)
+    row = {"devices": mesh.size, "tp": tp,
+           "concurrency": concurrency, "requests": requests,
+           "max_new": max_new,
+           "tokens_match": toks_single == toks_shard,
+           "single_tok_s": single_tps, "sharded_tok_s": shard_tps,
+           "single_wall_s": single_wall, "sharded_wall_s": shard_wall,
+           "shard_decode_dispatches":
+               d.get("engine.shard.decode_dispatches", 0),
+           "shard_prefill_dispatches":
+               d.get("engine.shard.prefill_dispatches", 0)}
+    print(f"sharded tp={tp} over {mesh.size} devices: {single_tps} tok/s "
+          f"single -> {shard_tps} tok/s sharded, "
+          f"{row['shard_decode_dispatches']} decode + "
+          f"{row['shard_prefill_dispatches']} prefill dispatches, "
           f"match={row['tokens_match']}")
     return row
 
@@ -612,6 +700,12 @@ def main(smoke: bool = False, out_json: str = "BENCH_serving.json",
         sys_len=48 if smoke else 64, tail_len=8,
         max_new=4 if smoke else 16, max_len=128, page_size=16,
         prefill_chunk=16)
+    # tensor-parallel serving: mesh vs single device, same workload
+    # (needs a multi-device host mesh; records the skip otherwise)
+    results["sharded"] = bench_sharded(
+        model, params, cfg, concurrency=4,
+        requests=6 if smoke else 12,
+        max_new=6 if smoke else 16, max_len=128, page_size=16)
     # observability overhead: tracer off vs on, same workload
     results["obs_overhead"] = bench_obs_overhead(
         model, params, cfg, concurrency=8,

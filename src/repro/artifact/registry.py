@@ -75,13 +75,15 @@ class _Lock:
         self.timeout_s = timeout_s
 
     def __enter__(self):
-        deadline = time.time() + self.timeout_s
+        # monotonic, not wall: an NTP step during acquisition must neither
+        # spuriously raise TimeoutError nor extend the wait unboundedly
+        deadline = time.monotonic() + self.timeout_s
         while True:
             try:
                 os.mkdir(self.path)
                 return self
             except FileExistsError:
-                if time.time() > deadline:
+                if time.monotonic() > deadline:
                     raise TimeoutError(
                         f"registry lock {self.path} held for "
                         f">{self.timeout_s}s; remove it if its owner died")

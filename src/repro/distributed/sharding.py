@@ -41,6 +41,57 @@ MULTI_POD_RULES: Dict[str, Axis] = {
 }
 
 
+def serving_rules(num_q_heads: int, num_kv_heads: int,
+                  mesh: Mesh) -> Dict[str, Axis]:
+    """Rule set for tensor-parallel SERVING (engine decode/prefill).
+
+    Bitwise token-identity is the serving contract, which rules out any
+    resolution that introduces a psum over a contraction dim (all-reduce
+    reassociates fp addition).  Attention is per-head independent, so
+    only the KV-head axis of the page pool (and the matching q/k/v head
+    dims inside the shard_mapped kernel dispatch) shards over "model";
+    everything else — activations, dense weights, the o/FFN projections
+    — stays replicated and the sharded attention outputs are
+    all-gathered (an exact concat) before the replicated o-projection.
+
+    ``tp_kv`` resolves to "model" only when both head counts divide the
+    model-axis size (GQA shards q-heads g-per-kv-head alongside);
+    otherwise the pool is replicated too and sharding degenerates to
+    single-device math.  ``tp_hd`` never shards in serving: splitting
+    head_dim would split the softmax contraction.
+    """
+    tp = mesh.shape.get("model", 1)
+    divisible = (tp > 1 and num_kv_heads % tp == 0
+                 and num_q_heads % tp == 0)
+    return {
+        "batch": None,
+        "cache_batch": None,
+        "fsdp": None,
+        "tp": None,
+        "expert": None,
+        "seq": None,
+        "tp_kv": "model" if divisible else None,
+        "tp_hd": None,
+    }
+
+
+# Placement-time rules for the hashed banks only (see
+# ``nn.layers.bank_pspec``): banks materialize via gather — exact under
+# sharding — so they MAY shard over "model" even though runtime dense
+# weights must not.  Used by the engine when device_put-ing params onto
+# a serving mesh, never activated during traced computation.
+SERVING_BANK_RULES: Dict[str, Axis] = {
+    "batch": None,
+    "cache_batch": None,
+    "fsdp": None,
+    "tp": "model",
+    "expert": None,
+    "seq": None,
+    "tp_kv": None,
+    "tp_hd": None,
+}
+
+
 class _Ctx(threading.local):
     mesh: Optional[Mesh] = None
     rules: Optional[Dict[str, Axis]] = None

@@ -34,6 +34,26 @@ def single_device_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_serving_mesh(tp: int, *, data: int = 1):
+    """(data, model=tp) mesh over the FIRST data*tp local devices.
+
+    Built with a raw ``Mesh`` over a device subset (``jax.make_mesh``
+    wants to place over all devices) so a tp=2 engine works on a
+    host-simulated 8-device CPU (XLA_FLAGS=--xla_force_host_platform_
+    device_count=8) and on a partial slice.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    n = data * tp
+    devs = jax.devices()
+    if len(devs) < n:
+        raise ValueError(
+            f"mesh (data={data}, model={tp}) needs {n} devices, "
+            f"have {len(devs)}")
+    return Mesh(np.array(devs[:n]).reshape(data, tp), ("data", "model"))
+
+
 # TPU v5e hardware model for the roofline (assignment constants)
 PEAK_FLOPS_BF16 = 197e12      # per chip
 HBM_BW = 819e9                # bytes/s per chip

@@ -547,6 +547,10 @@ def _build_decoder(cfg: ArchConfig) -> Model:
                 attn_plan, lp["attn"], h, pages=(pk, pv),
                 page_table=page_table, lengths=lengths, is_global=glob,
                 impl=impl)
+            # pin the pool's head-shard layout across layers (serving
+            # rules resolve tp_kv -> model on a serving mesh, else no-op)
+            nk = shd.constraint(nk, P(None, None, L.TP_KV, L.TP_HD))
+            nv = shd.constraint(nv, P(None, None, L.TP_KV, L.TP_HD))
             x = x + a
             h = norm_apply(lp["ln2"], x)
             if use_moe:
@@ -619,6 +623,10 @@ def _build_decoder(cfg: ArchConfig) -> Model:
                 attn_plan, lp["attn"], h, pages=(pk, pv),
                 page_table=page_table, starts=starts, counts=counts,
                 write_from=write_from, is_global=glob, impl=impl)
+            # pin the pool's head-shard layout across layers (see
+            # decode_paged)
+            nk = shd.constraint(nk, P(None, None, L.TP_KV, L.TP_HD))
+            nv = shd.constraint(nv, P(None, None, L.TP_KV, L.TP_HD))
             x = x + a
             h = norm_apply(lp["ln2"], x)
             f = FFN.apply(ffn_plan, lp["ffn"], h)

@@ -19,6 +19,40 @@ from repro.core import hashed as H
 from repro.nn import layers as L
 
 
+def _serving_tp():
+    """(mesh, tp) when the active sharding rules put the KV-head axis on
+    a >1 "model" axis (tensor-parallel serving), else (None, 1).
+
+    Attention is per-head independent, so splitting the paged pool and
+    the q/k/v head dims across a mesh axis and running the scatter +
+    kernel per shard is BITWISE identical to the single-device dispatch
+    — no reduction crosses shards.  The engine activates
+    ``distributed.sharding.serving_rules`` around its jitted paths;
+    without an active mesh (unit tests, single device) this returns
+    (None, 1) and the paged paths below compile exactly as before.
+    """
+    from repro.distributed import sharding as shd
+    mesh = shd.active_mesh()
+    if mesh is None:
+        return None, 1
+    axis = shd.resolve_spec(P(L.TP_KV))[0]
+    if isinstance(axis, (tuple, list)):
+        axis = axis[0] if len(axis) == 1 else None
+    if axis != "model":
+        return None, 1
+    tp = mesh.shape.get("model", 1)
+    return (mesh, tp) if tp > 1 else (None, 1)
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """shard_map with the settings every serving dispatch needs:
+    check_rep off (pallas_call inside a shard_map cannot carry the
+    replication-checking rule set)."""
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
 @dataclasses.dataclass(frozen=True)
 class AttentionPlan:
     d_model: int
@@ -268,14 +302,6 @@ def apply_paged(plan: AttentionPlan, params, x, *, pages, page_table,
         k = L.rope(k, positions, plan.rope_theta)
 
     pk, pv = pages
-    ps = pk.shape[1]
-    pidx = jnp.take_along_axis(page_table, (lengths // ps)[:, None],
-                               axis=1)[:, 0]
-    poff = lengths % ps
-    # distinct live rows own distinct pages (allocator invariant); idle
-    # rows all write the trash page, where collisions are harmless
-    pk = pk.at[pidx, poff].set(k[:, 0].astype(pk.dtype))
-    pv = pv.at[pidx, poff].set(v[:, 0].astype(pv.dtype))
 
     if plan.sliding_window > 0:
         window = jnp.asarray(plan.sliding_window, jnp.int32)
@@ -286,7 +312,40 @@ def apply_paged(plan: AttentionPlan, params, x, *, pages, page_table,
 
     fn = PA.paged_decode_attention if impl == "pallas" \
         else KREF.paged_attention_ref
-    out = fn(q[:, 0], pk, pv, page_table, lengths + 1, window)
+
+    def scatter_attend(q1, k1, v1, pk, pv, page_table, lengths, window):
+        ps = pk.shape[1]
+        pidx = jnp.take_along_axis(page_table, (lengths // ps)[:, None],
+                                   axis=1)[:, 0]
+        poff = lengths % ps
+        # distinct live rows own distinct pages (allocator invariant);
+        # idle rows all write the trash page, collisions harmless there
+        npk = pk.at[pidx, poff].set(k1.astype(pk.dtype))
+        npv = pv.at[pidx, poff].set(v1.astype(pv.dtype))
+        return fn(q1, npk, npv, page_table, lengths + 1, window), npk, npv
+
+    mesh, _tp = _serving_tp()
+    if mesh is not None:
+        # per-head-shard scatter + attend: each shard owns Hkv/tp kv
+        # heads of the pool and the matching Hq/tp q heads (GQA groups
+        # ride along), table/lengths replicated — no cross-shard math,
+        # so the sharded dispatch is bitwise the single-device one
+        head = P(None, "model", None)
+        pool = P(None, None, "model", None)
+        out, pk, pv = _shard_map(
+            scatter_attend, mesh,
+            in_specs=(head, head, head, pool, pool,
+                      P(None, None), P(None), P()),
+            out_specs=(head, pool, pool),
+        )(q[:, 0], k[:, 0], v[:, 0], pk, pv, page_table, lengths, window)
+        # exact all-gather of the head shards (a concat, not a psum)
+        # BEFORE the o-projection, which then runs replicated with the
+        # single-device reduction order — the bitwise-identity contract
+        out = jax.lax.with_sharding_constraint(
+            out, jax.sharding.NamedSharding(mesh, P(None, None, None)))
+    else:
+        out, pk, pv = scatter_attend(q[:, 0], k[:, 0], v[:, 0], pk, pv,
+                                     page_table, lengths, window)
     out = out.reshape(b, 1, plan.q_dim).astype(plan.dtype)
 
     o_lin = _lin(plan, plan.q_dim, plan.d_model, plan.hash_o,
@@ -407,20 +466,6 @@ def apply_paged_prefill(plan: AttentionPlan, params, x, *, pages,
         k = L.rope(k, positions, plan.rope_theta)
 
     pk, pv = pages
-    ps = pk.shape[1]
-    maxp = page_table.shape[1]
-    wvalid = (offs < counts[:, None]) \
-        & (positions >= write_from[:, None])          # (B, S)
-    # clamp the page slot for padding positions that run past the
-    # table; their writes are redirected to the trash page anyway
-    pno = jnp.minimum(positions // ps, maxp - 1)
-    pidx = jnp.where(wvalid,
-                     jnp.take_along_axis(page_table, pno, axis=1), 0)
-    poff = positions % ps
-    pk = pk.at[pidx.reshape(-1), poff.reshape(-1)].set(
-        k.reshape(b * s_blk, *k.shape[2:]).astype(pk.dtype))
-    pv = pv.at[pidx.reshape(-1), poff.reshape(-1)].set(
-        v.reshape(b * s_blk, *v.shape[2:]).astype(pv.dtype))
 
     if plan.sliding_window > 0:
         window = jnp.asarray(plan.sliding_window, jnp.int32)
@@ -431,7 +476,47 @@ def apply_paged_prefill(plan: AttentionPlan, params, x, *, pages,
 
     fn = FP.paged_prefill_attention if impl == "pallas" \
         else KREF.paged_prefill_ref
-    out = fn(q, pk, pv, page_table, starts, counts, window)
+
+    def scatter_attend(q_, k_, v_, pk, pv, page_table, starts, counts,
+                       write_from, window):
+        ps = pk.shape[1]
+        maxp = page_table.shape[1]
+        offs_ = jnp.arange(q_.shape[1], dtype=jnp.int32)[None, :]
+        positions_ = starts[:, None] + offs_
+        wvalid = (offs_ < counts[:, None]) \
+            & (positions_ >= write_from[:, None])     # (B, S)
+        # clamp the page slot for padding positions that run past the
+        # table; their writes are redirected to the trash page anyway
+        pno = jnp.minimum(positions_ // ps, maxp - 1)
+        pidx = jnp.where(wvalid,
+                         jnp.take_along_axis(page_table, pno, axis=1), 0)
+        poff = positions_ % ps
+        nb, ns = q_.shape[0], q_.shape[1]
+        npk = pk.at[pidx.reshape(-1), poff.reshape(-1)].set(
+            k_.reshape(nb * ns, *k_.shape[2:]).astype(pk.dtype))
+        npv = pv.at[pidx.reshape(-1), poff.reshape(-1)].set(
+            v_.reshape(nb * ns, *v_.shape[2:]).astype(pv.dtype))
+        return fn(q_, npk, npv, page_table, starts, counts, window), \
+            npk, npv
+
+    mesh, _tp = _serving_tp()
+    if mesh is not None:
+        # see apply_paged: per-head-shard scatter + kernel, replicated
+        # ragged metadata, exact head concat before the o-projection
+        head = P(None, None, "model", None)
+        pool = P(None, None, "model", None)
+        rep1 = P(None)
+        out, pk, pv = _shard_map(
+            scatter_attend, mesh,
+            in_specs=(head, head, head, pool, pool,
+                      P(None, None), rep1, rep1, rep1, P()),
+            out_specs=(head, pool, pool),
+        )(q, k, v, pk, pv, page_table, starts, counts, write_from, window)
+        out = jax.lax.with_sharding_constraint(
+            out, jax.sharding.NamedSharding(mesh, P(None, None, None, None)))
+    else:
+        out, pk, pv = scatter_attend(q, k, v, pk, pv, page_table, starts,
+                                     counts, write_from, window)
     out = out.reshape(b, s_blk, plan.q_dim).astype(plan.dtype)
 
     o_lin = _lin(plan, plan.q_dim, plan.d_model, plan.hash_o,

@@ -266,7 +266,8 @@ class Engine:
                  tracer: Optional[Tracer] = None,
                  debug_leak_check: bool = False,
                  draft: Optional[Tuple[Model, Any]] = None,
-                 spec_k: int = 4):
+                 spec_k: int = 4,
+                 mesh: Optional[Any] = None):
         """max_concurrency (alias: slots) fixes the decode batch width.
 
         Paged knobs (decoder kinds): ``page_size`` tokens per KV page;
@@ -312,6 +313,21 @@ class Engine:
         the paged backend on a decoder kind (MoE excluded: its
         capacity routing is batch-shape dependent, so block-verify
         parity doesn't hold).
+
+        ``mesh``: a ``(data, model)`` jax Mesh (`launch.mesh.
+        make_serving_mesh`) enabling tensor-parallel decode/prefill:
+        the page pool and hashed banks shard over the "model" axis,
+        the paged attention dispatches run shard_mapped per head
+        shard (`nn.attention`), and the scheduler/allocator/page
+        table stay host-global.  Emitted tokens are BITWISE identical
+        to the single-device engine (no cross-shard reduction ever
+        runs: attention is per-head, the head shards are all-gathered
+        — an exact concat — before the replicated projections).  When
+        the head counts don't divide the mesh's model axis the pool
+        replicates and each device redundantly computes the
+        single-device math.  Requires the paged backend; speculative
+        decoding on a mesh is not supported yet (the draft keeps a
+        second, unsharded pool).
         """
         self.model = model
         self.params = params
@@ -327,6 +343,15 @@ class Engine:
         if self.paged and model.decode_paged is None:
             raise ValueError(
                 f"arch kind {model.cfg.arch_kind!r} has no paged decode")
+        self.mesh = mesh
+        if mesh is not None:
+            if not self.paged:
+                raise ValueError("mesh= requires the paged backend "
+                                 "(decoder kinds)")
+            if draft is not None:
+                raise ValueError("mesh= with speculative decoding is not "
+                                 "supported (the draft keeps a second, "
+                                 "unsharded page pool)")
         if not self.paged and (prefix_cache or prefill_chunk is not None):
             raise ValueError("prefix_cache/prefill_chunk require the "
                              "paged backend (decoder kinds)")
@@ -372,6 +397,9 @@ class Engine:
         self._h_pbatch = self.metrics.histogram("engine.prefill_batch_s")
         self._leak_anomalies = self.metrics.counter("kv.leak_anomalies")
         self.last_leak_error: Optional[str] = None
+        # engine.shard.* exists only on mesh engines: non-mesh registry
+        # snapshots (and the bench deltas diffed off them) stay unchanged
+        self._shard_counts = None
 
         if self.paged:
             # page-aligned max_len keeps every prefill page copy in
@@ -423,6 +451,8 @@ class Engine:
                 from repro.serving.spec_decode import SpecDecoder
                 self.spec = SpecDecoder(self, draft[0], draft[1],
                                         k=spec_k, attn_impl=attn_impl)
+            if mesh is not None:
+                self._init_mesh(mesh)
         else:
             if draft is not None:
                 raise ValueError("speculative decoding requires the "
@@ -482,6 +512,89 @@ class Engine:
             kwargs["draft"] = (dmodel, dparams)
         return cls(model, params, slots=slots, max_len=max_len,
                    eos_id=eos_id, seed=seed, **kwargs)
+
+    # ------------------------------------------------------------------
+    def _init_mesh(self, mesh) -> None:
+        """Tensor-parallel placement: shard the page pool on the kv-head
+        axis and the hashed banks on their bucket axis, replicate every
+        other param, and wrap each jitted serving dispatch so it traces
+        and executes under the serving rule set (``tp_kv -> model``,
+        all activation/dense-weight axes replicated —
+        `distributed.sharding.serving_rules`).  Inside that context
+        `nn.attention` shard_maps its scatter+kernel block per head
+        shard and all-gathers the head outputs (an exact concat) before
+        the replicated o-projection — no cross-shard reduction ever
+        runs, so emitted tokens are bitwise the single-device ones."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed import sharding as shd
+        from repro.serving.paged_cache import pool_pspec
+
+        cfg = self.model.cfg
+        tp = mesh.shape.get("model", 1)
+        self._rules = shd.serving_rules(cfg.num_heads, cfg.num_kv_heads,
+                                        mesh)
+        self.pages = jax.device_put(
+            self.pages, NamedSharding(mesh, pool_pspec(
+                cfg.num_kv_heads, cfg.num_heads, tp)))
+        self.params = self._place_params(mesh, tp)
+
+        def wrap(fn, replicate_out=False):
+            def call(*a):
+                with shd.use_mesh(mesh, self._rules):
+                    out = fn(*a)
+                if replicate_out:
+                    # scratch caches feed the replicated sequential
+                    # prefill path: re-replicate eagerly so no sharded
+                    # operand leaks into an unconstrained dot (which
+                    # GSPMD could partition into a psum — inexact)
+                    out = jax.device_put(out, NamedSharding(mesh, P()))
+                return out
+            return call
+
+        self._decode_paged = wrap(self._decode_paged)
+        self._page_copy = wrap(self._page_copy)
+        self._gather = wrap(self._gather, replicate_out=True)
+        self._cow_copy = wrap(self._cow_copy)
+        self._prefill = wrap(self._prefill)
+        if self.batched_prefill:
+            self._prefill_batched = wrap(self._prefill_batched)
+            self._logits_head = wrap(self._logits_head)
+        self.metrics.gauge("engine.shard.devices").set(mesh.size)
+        self.metrics.gauge("engine.shard.tp").set(tp)
+        self._shard_counts = self.metrics.group("engine.shard", keys=(
+            "decode_dispatches", "prefill_dispatches"))
+
+    def _place_params(self, mesh, tp: int):
+        """Hashed banks shard over "model" (the bucket axis is a pure
+        gather source — exact under sharding); everything else
+        replicates.  Banks are the ONLY pspec leaves with a TUPLE axis
+        containing "tp" (`nn.layers.bank_pspec`; layer-stacked banks
+        carry it on axis 1 behind the stack axis); dense weights carry
+        plain (fsdp, tp) axes and MUST stay replicated — sharding a
+        projection's contraction dim would psum its output, breaking
+        bitwise token-identity."""
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.distributed import sharding as shd
+
+        specs = self.model.pspecs()
+        rep = NamedSharding(mesh, P())
+
+        def bank_axis(spec):
+            for i, ax in enumerate(spec):
+                if isinstance(ax, (tuple, list)) and "tp" in ax:
+                    return i
+            return None
+
+        def place(spec, p):
+            ax = bank_axis(spec)
+            if ax is not None and p.shape[ax] % tp == 0:
+                phys = shd.resolve_spec(spec, shd.SERVING_BANK_RULES)
+                return jax.device_put(p, NamedSharding(mesh, phys))
+            return jax.device_put(p, rep)
+
+        return jax.tree.map(
+            place, specs, self.params,
+            is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
 
     # ------------------------------------------------------------------
     def _extra_tokens(self, req: Request) -> int:
@@ -737,6 +850,8 @@ class Engine:
                 batch.update({k: jnp.asarray(v) for k, v in
                               req.extras.items()})
         logits, c1 = self._prefill(self.params, batch)
+        if self._shard_counts is not None:
+            self._shard_counts["prefill_dispatches"] += 1
         st.cache = c1
         new_pos = int(np.asarray(c1["index"]))
         # land the freshly computed positions' pages; shared prefix
@@ -846,6 +961,8 @@ class Engine:
             jnp.asarray(counts), jnp.asarray(wfrom))
         dt = time.perf_counter() - t0
         self._pb_counts["dispatches"] += 1
+        if self._shard_counts is not None:
+            self._shard_counts["prefill_dispatches"] += 1
         self._pb_counts["rows"] += n
         self._pb_counts["tokens"] += int(counts.sum())
         self._h_pbatch.observe(dt)
@@ -1068,6 +1185,11 @@ class Engine:
         now = _now_mono()
         for r in self.sched.expire(now):
             r.status = "expired"       # scheduler set finish_reason
+            # stamp the finish clocks like _finish does: a streaming
+            # client's terminal "deadline" delta and the latency math
+            # must see real marks, not None
+            r.finish_mono = now
+            r.finish_time = _now_wall()
             self._counts["failed"] += 1
             self._finish_counts[FINISH_DEADLINE] += 1
             if self.tracer.enabled:
@@ -1116,6 +1238,8 @@ class Engine:
                 logits, self.pages = self._decode_paged(
                     self.params, jnp.asarray(self._tokens), self.pages,
                     jnp.asarray(table), jnp.asarray(lengths))
+                if self._shard_counts is not None:
+                    self._shard_counts["decode_dispatches"] += 1
                 # ONE fused dispatch for the whole decode batch;
                 # inactive rows are sampled-and-discarded (the counter-
                 # based PRNG makes discarded draws side-effect free)

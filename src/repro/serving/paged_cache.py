@@ -40,6 +40,16 @@ tests/test_serving.py and tests/test_serving_fuzz.py):
 - ``leak_check`` asserts the full accounting after any sequence of
   operations: refcounts match holders exactly, no page is free and
   referenced at once, and free + used == usable.
+
+**Sharded layout (tensor-parallel serving, ``Engine(mesh=...)``):** the
+page pool shards on the KV-HEAD axis over the mesh's "model" axis (see
+:func:`pool_pspec`) — each device holds ``num_kv_heads / tp`` heads of
+EVERY physical page, so there is still exactly ONE global page id space
+and ONE global ``(rows, MAXP)`` page table.  Nothing in this module
+changes under sharding: the allocator, refcounts, prefix tree, and COW
+queue stay host-global (page ids name whole cross-device pages), and
+the device-local gathers happen inside the shard_mapped attention
+dispatch (`nn.attention`).
 """
 from __future__ import annotations
 
@@ -52,6 +62,22 @@ import numpy as np
 from repro.obs.metrics import MetricsRegistry
 
 TRASH_PAGE = 0
+
+
+def pool_pspec(num_kv_heads: int, num_q_heads: int, tp: int):
+    """PartitionSpec for the stacked page pool ``{"k","v"}`` of shape
+    ``(num_layers, num_pages, page_size, num_kv_heads, head_dim)``.
+
+    Shards the kv-head axis over "model" when both head counts divide
+    ``tp`` (GQA ships each kv head's whole query group to one shard);
+    otherwise fully replicated — the engine then runs single-device
+    math on every device rather than splitting a softmax contraction
+    (head_dim/page sharding would break the bitwise-identity contract).
+    """
+    from jax.sharding import PartitionSpec as P
+    if tp > 1 and num_kv_heads % tp == 0 and num_q_heads % tp == 0:
+        return P(None, None, None, "model", None)
+    return P(None, None, None, None, None)
 
 
 class PageAllocator:

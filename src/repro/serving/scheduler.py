@@ -41,7 +41,7 @@ from repro.serving.api import FINISH_DEADLINE
 POLICIES = ("fifo", "priority")
 
 _COUNTERS = ("submitted", "queue_rejected", "requeued", "queue_expired",
-             "admitted", "prefill_chunks", "decoded_tokens",
+             "admitted", "unpopped", "prefill_chunks", "decoded_tokens",
              "prefill_ticks", "decode_ticks", "interleaved_ticks")
 
 
@@ -97,9 +97,12 @@ class Scheduler:
     def unpop(self, req) -> None:
         """Put back a popped head that could not actually be admitted
         (the engine's admission gate is optimistic under prefix
-        sharing): restores arrival order and retracts the admission
-        count without recording a preemption-style requeue."""
-        self.counters["admitted"] -= 1
+        sharing): restores arrival order without recording a
+        preemption-style requeue.  Counts ``unpopped`` rather than
+        decrementing ``admitted`` — counters stay monotone so
+        ``diff_snapshots`` over a window containing an unpop can never
+        report negative admissions; ``snapshot`` derives the net."""
+        self.counters["unpopped"] += 1
         self._classes.setdefault(self._class(req), deque()).appendleft(req)
 
     def expire(self, now: float) -> List:
@@ -164,4 +167,6 @@ class Scheduler:
         self._depth.set(len(self))
         out = dict(self.counters)
         out["queue_depth"] = len(self)
+        # derived, not a counter: admissions that actually stuck
+        out["admitted_net"] = out["admitted"] - out["unpopped"]
         return out

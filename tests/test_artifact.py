@@ -330,6 +330,43 @@ def test_registry_versions_and_integrity(tmp_path):
         areg.resolve(root, "nope")
 
 
+def test_registry_lock_timeout_survives_wall_clock_step(tmp_path,
+                                                        monkeypatch):
+    """Lock acquisition times out on the MONOTONIC clock: a wall clock
+    stepping backwards (NTP) while another process holds the lock used
+    to extend the wait unboundedly (regression for the wall-deadline
+    ``_Lock.__enter__``)."""
+    root = str(tmp_path / "reg")
+    os.makedirs(root)
+    lock = areg._Lock(root, timeout_s=1.0)
+    os.mkdir(lock.path)              # another process holds the lock
+
+    fake_mono = [100.0]
+
+    def monotonic():
+        fake_mono[0] += 0.1
+        return fake_mono[0]
+
+    wall = [1e9]
+
+    def wall_time():
+        wall[0] -= 3600.0            # NTP steps backwards at every look
+        return wall[0]
+
+    monkeypatch.setattr(areg.time, "monotonic", monotonic)
+    monkeypatch.setattr(areg.time, "time", wall_time)
+    monkeypatch.setattr(areg.time, "sleep", lambda s: None)
+    with pytest.raises(TimeoutError):
+        lock.__enter__()
+    assert fake_mono[0] - 100.0 < 5.0, \
+        "lock wait must be bounded in monotonic time"
+    os.rmdir(lock.path)
+    # with the lock free, acquisition succeeds despite the wall chaos
+    with lock:
+        assert os.path.isdir(lock.path)
+    assert not os.path.isdir(lock.path)
+
+
 def test_registry_version_zero_is_an_error(tmp_path):
     art = str(tmp_path / "a.hnart")
     artifact.export_tree(art, {"w": np.arange(8, dtype=np.float32)})

@@ -179,6 +179,62 @@ def test_scheduler_deadline_spares_preempted_requests():
     assert sched.pop_admissible(lambda q: True) is r
 
 
+def test_scheduler_unpop_keeps_admitted_monotone():
+    """unpop() returns a popped-but-unplaceable head to the queue; the
+    ``admitted`` counter stays monotone (a ``diff_snapshots`` window
+    containing an unpop must never report negative admissions — the
+    regression this pins), ``unpopped`` records the bounce, and
+    ``snapshot`` derives the net."""
+    sched = Scheduler(SchedulerConfig())
+    a, b = _Req(0), _Req(1)
+    sched.submit(a, now=0.0)
+    sched.submit(b, now=0.0)
+    got = sched.pop_admissible(lambda r: True)
+    assert got is a
+    before = sched.counters["admitted"]
+    sched.unpop(got)
+    assert sched.counters["admitted"] == before, \
+        "admitted decremented on unpop"
+    assert sched.counters["unpopped"] == 1
+    snap = sched.snapshot()
+    assert snap["admitted_net"] == snap["admitted"] - snap["unpopped"] == 0
+    # arrival order restored: a pops again before b
+    assert sched.pop_admissible(lambda r: True) is a
+    assert sched.snapshot()["admitted_net"] == 1
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 12), seed=st.integers(0, 10 ** 6))
+def test_scheduler_counters_monotone_under_random_unpops(n, seed):
+    """Every counter is non-decreasing across a random pop/unpop/
+    requeue sequence, and admitted_net == pops that stuck."""
+    rng = np.random.default_rng(seed)
+    sched = Scheduler(SchedulerConfig(max_queue=n))
+    for uid in range(n):
+        assert sched.submit(_Req(uid), now=float(uid))
+    prev = sched.snapshot()
+    stuck = 0
+    for _ in range(60):
+        got = sched.pop_admissible(lambda r: True)
+        if got is None:
+            break
+        roll = rng.random()
+        if roll < 0.3:
+            sched.unpop(got)
+        elif roll < 0.5:
+            got.first_admit_mono = 0.0
+            sched.requeue(got)
+            stuck += 1
+        else:
+            stuck += 1
+        snap = sched.snapshot()
+        for k in prev:
+            if k not in ("queue_depth", "admitted_net"):
+                assert snap[k] >= prev[k], f"counter {k} went backwards"
+        prev = snap
+    assert prev["admitted_net"] == stuck
+
+
 def test_scheduler_requeue_restores_head():
     sched = Scheduler(SchedulerConfig())
     a, b = _Req(0), _Req(1)
@@ -383,6 +439,39 @@ def test_deadline_expiry_immune_to_wall_clock_steps(tiny, monkeypatch):
     assert b.status == "expired" and b.finish_reason == "deadline"
     eng.run()
     assert a.done and len(a.tokens) == 8     # a unaffected throughout
+
+
+def test_expired_request_stamps_finish_clocks_and_terminal_delta(
+        tiny, monkeypatch):
+    """The deadline-expiry path finishes a request like any other
+    terminal path: ``finish_mono``/``finish_time`` are stamped at the
+    expiring tick (latency math and streaming clients read them) and
+    the handle drains a terminal ``deadline`` delta.  Regression: the
+    expire path used to leave both clocks ``None``."""
+    from repro.serving import engine as engine_mod
+    mono = {"t": 0.0}
+    monkeypatch.setattr(engine_mod, "_now_mono", lambda: mono["t"])
+    monkeypatch.setattr(engine_mod, "_now_wall", lambda: 1234.5)
+    m, params = tiny
+    eng = Engine(m, params, max_concurrency=1, max_len=64, eos_id=-1,
+                 page_size=8,
+                 scheduler=SchedulerConfig(deadline_s=5.0, max_queue=8))
+    rng = np.random.default_rng(11)
+    a = Request(uid=0, prompt=_prompt(rng), max_new_tokens=6)
+    b = Request(uid=1, prompt=_prompt(rng), max_new_tokens=2)
+    ha = eng.submit(a)
+    hb = eng.submit(b)
+    assert ha and hb
+    eng.step()                       # a admitted: holds the only row
+    mono["t"] = 7.0                  # b's queue wait exceeds 5s
+    eng.run()
+    assert b.status == "expired" and b.finish_reason == "deadline"
+    assert b.finish_mono == 7.0, "finish_mono not stamped on expiry"
+    assert b.finish_time == 1234.5, "finish_time not stamped on expiry"
+    deltas = list(hb)
+    assert deltas and deltas[-1].done \
+        and deltas[-1].finish_reason == "deadline"
+    assert a.done and len(a.tokens) == 6
 
 
 # ---------------------------------------------------------------------------
