@@ -58,6 +58,11 @@ _EXACT_KEYS = {
     # sharded serving: mesh geometry is workload shape — a baseline
     # produced on an 8-device host mesh must be gated on one
     "devices", "tp",
+    # http_traffic: arrival-process shape + SLO definitions.  The
+    # attainment/goodput numbers those SLOs produce are PERF; the
+    # process generating the load must not drift silently.
+    "arrival", "rate_rps", "slo_ttft_s", "slo_e2e_s",
+    "bursts", "burst_size", "quota_pages", "models",
 }
 # Deterministic-per-workload accounting: tight relative band.
 _TIGHT_KEYS = {
@@ -83,6 +88,9 @@ _TIGHT_KEYS = {
     # (deterministic, burst-arrival) workload shape
     "shard_decode_dispatches", "shard_prefill_dispatches",
     "engine.shard.decode_dispatches", "engine.shard.prefill_dispatches",
+    # http_traffic: greedy decoding + fixed max_tokens + a queue deep
+    # enough to never refuse make these exact per-workload counters
+    "completed", "rejected_429", "expired_504",
 }
 # Sections whose token streams are sampled / arrival-order dependent:
 # even "tokens" class keys degrade to PERF there (stop sequences fire
@@ -92,6 +100,10 @@ _PERF_SECTIONS = ("mixed_sampling", "levels", "obs_overhead")
 
 def classify(path: Tuple[str, ...]) -> str:
     leaf = path[-1]
+    # http_traffic per-model token totals: leaves are model names, so
+    # the parent key — not the leaf — carries the class
+    if len(path) >= 2 and path[-2] == "per_model_tokens":
+        return TIGHT
     if leaf in _EXACT_KEYS:
         return EXACT
     if leaf in _TIGHT_KEYS:

@@ -37,6 +37,13 @@ workload runs on a single device and on a host-simulated mesh
 "model"), reporting tok/s for both arms, the sharded dispatch
 counters, and a bitwise token-identity cross-check.
 
+An **http_traffic** section drives the full asyncio HTTP front-end
+(`repro.serving.http`) over a two-model engine sharing one page pool
+(quota on the hashed tenant), replaying seeded Poisson and bursty
+arrival processes as real streaming HTTP clients — reporting SLO
+attainment, goodput, TTFT/e2e and queue-depth percentiles, plus
+deterministic completed/429/504 counts and per-model token totals.
+
 A fifth section measures **observability overhead**: the shared-prefix
 workload with the span tracer off vs on, reporting the throughput
 delta and a bitwise token-identity cross-check (tracing must never
@@ -639,6 +646,149 @@ def bench_sharded(model, params, cfg, *, concurrency: int, requests: int,
     return row
 
 
+def bench_http_traffic(dense_pack, hashed_pack, *, requests: int,
+                       max_new: int, max_len: int, page_size: int,
+                       quota_pages: int, burst_size: int) -> dict:
+    """Arrival-process traffic through the full HTTP stack.
+
+    Hosts the dense + hashed configs on one ``MultiModelEngine``
+    (shared page pool, quota on the hashed tenant) behind the asyncio
+    front-end, then replays two seeded arrival processes as real
+    streaming HTTP clients:
+
+    - **poisson** — exponential inter-arrivals at a fixed offered rate
+      (the steady-state mixed-tenant load), and
+    - **bursty** — all-at-once bursts of ``burst_size`` (the worst-case
+      admission/queueing pattern).
+
+    Per run: SLO attainment (client-side TTFT + e2e against fixed
+    SLOs), goodput (tokens from SLO-met requests only), TTFT/e2e
+    percentiles, queue-depth percentiles sampled during the run, and
+    the deterministic accounting — completed / 429-rejected /
+    504-expired counts and per-model token totals (greedy + fixed
+    ``max_tokens``: exact counters the regression gate holds TIGHT).
+    """
+    import asyncio
+
+    from repro.serving.http import HTTPFrontend
+    from repro.serving.http import client as http_client
+    from repro.serving.multi_model import MultiModelEngine
+
+    model, params, cfg = dense_pack
+    hmodel, hparams, hcfg = hashed_pack
+    names = ("qwen3-reduced-dense", "qwen3-reduced-hashed")
+    slo_ttft_s, slo_e2e_s = 2.0, 20.0
+
+    def _arrivals(kind):
+        """Seeded (t_arrive, model, prompt, seq) schedule."""
+        rng = np.random.default_rng(7 if kind == "poisson" else 8)
+        rate_rps = 40.0
+        out, t = [], 0.0
+        for i in range(requests):
+            if kind == "poisson":
+                t += float(rng.exponential(1.0 / rate_rps))
+            else:
+                t = (i // burst_size) * 0.25
+            plen = int(rng.integers(4, 16))
+            prompt = [int(x) for x in
+                      rng.integers(2, cfg.vocab_size, size=plen)]
+            out.append((t, names[int(rng.integers(0, 2))], prompt, i))
+        return rate_rps, out
+
+    async def _one_run(kind):
+        mm = MultiModelEngine(page_size=page_size,
+                              scheduler=SchedulerConfig(
+                                  max_queue=requests + 4))
+        mm.add_model(names[0], model, params, slots=4, max_len=max_len,
+                     eos_id=-1, seed=0)
+        mm.add_model(names[1], hmodel, hparams, slots=4,
+                     max_len=max_len, eos_id=-1, seed=0,
+                     page_quota=quota_pages)
+        fe = HTTPFrontend(mm, port=0, default_model=names[0])
+        await fe.start()
+        # warmup: compile both models' prefill + decode off the clock
+        for nm in names:
+            await http_client.request(
+                fe.host, fe.port, "POST", "/v1/completions",
+                dict(model=nm, prompt=[2, 3, 4, 5], max_tokens=2,
+                     temperature=0.0))
+
+        rate_rps, sched = _arrivals(kind)
+        loop = asyncio.get_running_loop()
+        depths, stop = [], asyncio.Event()
+
+        async def _sample_depth():
+            while not stop.is_set():
+                depths.append(len(mm.sched))
+                await asyncio.sleep(0.004)
+
+        async def _client(t_arrive, mdl, prompt, seq, t0):
+            await asyncio.sleep(max(0.0, t_arrive - (loop.time() - t0)))
+            payload = dict(model=mdl, prompt=prompt,
+                           max_tokens=max_new, temperature=0.0)
+            try:
+                r = await http_client.collect_stream(
+                    fe.host, fe.port, payload)
+            except http_client.HTTPStreamError as e:
+                return {"model": mdl, "status": e.status}
+            return {"model": mdl, "status": 200,
+                    "tokens": len(r["tokens"]),
+                    "ttft_s": r["ttft_s"], "e2e_s": r["e2e_s"]}
+
+        sampler = asyncio.create_task(_sample_depth())
+        t0 = loop.time()
+        results = await asyncio.gather(
+            *(_client(*spec, t0) for spec in sched))
+        wall = loop.time() - t0
+        stop.set()
+        await sampler
+        await fe.aclose()
+
+        ok = [r for r in results if r["status"] == 200]
+        met = [r for r in ok
+               if r["ttft_s"] is not None and r["ttft_s"] <= slo_ttft_s
+               and r["e2e_s"] <= slo_e2e_s]
+        per_model = {nm: sum(r["tokens"] for r in ok
+                             if r["model"] == nm) for nm in names}
+        total = sum(per_model.values())
+        pct = lambda xs, q: round(  # noqa: E731
+            float(np.percentile(xs, q)), 4) if xs else 0.0
+        row = {"arrival": kind, "requests": requests,
+               "rate_rps": rate_rps if kind == "poisson" else None,
+               "bursts": None if kind == "poisson"
+               else -(-requests // burst_size),
+               "burst_size": None if kind == "poisson" else burst_size,
+               "max_new": max_new, "models": list(names),
+               "quota_pages": quota_pages,
+               "slo_ttft_s": slo_ttft_s, "slo_e2e_s": slo_e2e_s,
+               "completed": len(ok),
+               "rejected_429": sum(1 for r in results
+                                   if r["status"] == 429),
+               "expired_504": sum(1 for r in results
+                                  if r["status"] == 504),
+               "per_model_tokens": per_model,
+               "slo_attainment": round(len(met) / max(len(ok), 1), 4),
+               "goodput_tok_s": round(
+                   sum(r["tokens"] for r in met) / wall, 2),
+               "tok_per_s": round(total / wall, 2),
+               "wall_s": round(wall, 3),
+               "ttft_p50_s": pct([r["ttft_s"] for r in ok], 50),
+               "ttft_p99_s": pct([r["ttft_s"] for r in ok], 99),
+               "e2e_p50_s": pct([r["e2e_s"] for r in ok], 50),
+               "e2e_p99_s": pct([r["e2e_s"] for r in ok], 99),
+               "queue_depth_p50": pct(depths, 50),
+               "queue_depth_p95": pct(depths, 95)}
+        print(f"http_traffic/{kind}: {row['completed']}/{requests} ok, "
+              f"{row['tok_per_s']} tok/s, slo {row['slo_attainment']}, "
+              f"goodput {row['goodput_tok_s']} tok/s, "
+              f"ttft p99 {row['ttft_p99_s']}s, "
+              f"qdepth p95 {row['queue_depth_p95']}")
+        return row
+
+    return {"runs": [asyncio.run(_one_run("poisson")),
+                     asyncio.run(_one_run("bursty"))]}
+
+
 def main(smoke: bool = False, out_json: str = "BENCH_serving.json",
          trace_out: str = None) -> dict:
     levels = (1, 2, 4) if smoke else (1, 4, 8)
@@ -706,6 +856,13 @@ def main(smoke: bool = False, out_json: str = "BENCH_serving.json",
         model, params, cfg, concurrency=4,
         requests=6 if smoke else 12,
         max_new=6 if smoke else 16, max_len=128, page_size=16)
+    # HTTP traffic harness: both configs behind the asyncio front-end
+    # on one multi-model engine, seeded Poisson + bursty arrivals
+    results["http_traffic"] = bench_http_traffic(
+        dense, hashed,
+        requests=8 if smoke else 20,
+        max_new=4 if smoke else 8, max_len=128, page_size=16,
+        quota_pages=40, burst_size=4)
     # observability overhead: tracer off vs on, same workload
     results["obs_overhead"] = bench_obs_overhead(
         model, params, cfg, concurrency=8,

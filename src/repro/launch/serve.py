@@ -101,7 +101,12 @@ def main() -> int:
                         "to non-speculative decode")
     p.add_argument("--spec-k", type=int, default=4,
                    help="draft proposal depth per tick (with "
-                        "--spec-draft)")
+                        "--spec-draft); with --spec-adaptive this is "
+                        "k_max")
+    p.add_argument("--spec-adaptive", action="store_true",
+                   help="adapt the proposal depth within [1, --spec-k] "
+                        "from an accept-rate EWMA; emitted tokens stay "
+                        "bitwise identical (acceptance is equality)")
     p.add_argument("--mesh", default=None, metavar="TP|DxM",
                    help="tensor-parallel serving mesh: a model-axis "
                         "size ('2'), or 'DxM' for (data, model).  The "
@@ -175,7 +180,7 @@ def main() -> int:
         print(f"serving mesh: (data={d}, model={m}) over "
               f"{mesh.size} devices")
     engine_kwargs = dict(
-        mesh=mesh,
+        mesh=mesh, spec_adaptive=args.spec_adaptive,
         slots=concurrency, max_len=args.max_len, eos_id=-1,
         tracer=tracer, debug_leak_check=args.debug_leak_check,
         page_size=args.page_size, num_pages=args.num_pages,
@@ -284,20 +289,50 @@ def main() -> int:
                   f"fit the page pool — see --queue-limit/--num-pages)")
         else:
             handles.append(h)
-    if args.stream:
+    # graceful drain: first SIGINT/SIGTERM stops admitting (queued
+    # requests get terminal "cancelled" deltas, in-flight rows finish,
+    # the final metrics table still prints); a second one force-quits
+    import signal
+    drain = {"requested": False}
+
+    def _on_signal(signum, frame):
+        if drain["requested"]:
+            raise SystemExit(130)
+        drain["requested"] = True
+        print(f"\n[signal {signum}] draining: finishing in-flight rows, "
+              "cancelling queued (signal again to force-quit)")
+
+    old_handlers = {s: signal.signal(s, _on_signal)
+                    for s in (signal.SIGINT, signal.SIGTERM)}
+    drained_queue = False
+    try:
         # poll-style multiplexing: one engine loop, drain every handle's
-        # available deltas per tick
+        # available deltas per tick (terminal deltas too — including
+        # "cancelled" ones emitted by a drain)
         while eng.pending():
+            if drain["requested"] and not drained_queue:
+                drained_queue = True
+                n = len(eng.cancel_queued())
+                if n:
+                    print(f"cancelled {n} queued request(s)")
             eng.step()
+            if args.stream:
+                for h in handles:
+                    for d in h.drain():
+                        lp = "" if not d.new_logprobs else \
+                            f"  lp={['%.3f' % v for v in d.new_logprobs]}"
+                        fin = f"  [{d.finish_reason}]" if d.done else ""
+                        print(f"req {d.uid} += {d.new_token_ids}{lp}{fin}")
+        if args.stream and drain["requested"]:
+            # emit any terminal deltas landed after the last tick
             for h in handles:
                 for d in h.drain():
-                    lp = "" if not d.new_logprobs else \
-                        f"  lp={['%.3f' % v for v in d.new_logprobs]}"
                     fin = f"  [{d.finish_reason}]" if d.done else ""
-                    print(f"req {d.uid} += {d.new_token_ids}{lp}{fin}")
+                    print(f"req {d.uid} += {d.new_token_ids}{fin}")
         done = [h.req for h in handles if h.req.done]
-    else:
-        done = eng.run()
+    finally:
+        for s, old in old_handlers.items():
+            signal.signal(s, old)
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.tokens) for r in done)
     for r in sorted(done, key=lambda r: r.uid):
@@ -323,9 +358,12 @@ def main() -> int:
     eng.shutdown()
     if eng.last_leak_error:
         print(f"LEAK CHECK FAILED:\n{eng.last_leak_error}")
-    if args.metrics_out:
+    if args.metrics_out or drain["requested"]:
+        # a drained run always prints the final table — the operator
+        # asked the server to stop, not to discard its telemetry
         print("--- metrics ---")
         print(eng.metrics.render())
+    if args.metrics_out:
         eng.metrics.export(args.metrics_out)
         print(f"metrics snapshot -> {args.metrics_out}")
     if args.trace_out:

@@ -206,6 +206,13 @@ class MetricsRegistry:
     def group(self, prefix: str, keys: Sequence[str] = ()) -> MetricView:
         return MetricView(self, prefix, keys)
 
+    def scoped(self, prefix: str) -> "ScopedRegistry":
+        """A registry view that prepends ``<prefix>.`` to every metric
+        name — the per-model label mechanism for the multi-model engine
+        (each hosted model's ``engine.*`` / ``kv.*`` metrics publish as
+        ``model.<name>.engine.*`` in the ONE shared parent registry)."""
+        return ScopedRegistry(self, prefix)
+
     # ------------------------------------------------------------------
     def snapshot(self) -> Dict[str, object]:
         """Flat {canonical name: value-or-histogram-summary} dict."""
@@ -242,6 +249,64 @@ class MetricsRegistry:
                     if isinstance(v, float) else str(v)
             lines.append(f"{kind:7s} {name:<{width}}  {body}")
         return "\n".join(lines)
+
+
+class ScopedRegistry:
+    """A prefix-scoped view over a parent `MetricsRegistry`.
+
+    Every metric created through it lives in the PARENT under
+    ``<prefix>.<name>`` — one flat namespace holds every hosted
+    model's metrics side by side (``model.a.engine.tokens`` next to
+    ``model.b.engine.tokens``), so one ``snapshot()``/``export()`` on
+    the parent captures the whole multi-model engine.  The view's own
+    ``snapshot()``/``render()`` are filtered to the scope, keeping
+    per-engine readers (``Engine.stats()``, bench workload deltas)
+    working unchanged on a scoped engine."""
+
+    def __init__(self, parent: "MetricsRegistry", prefix: str):
+        if not prefix or prefix.endswith("."):
+            raise ValueError(f"bad scope prefix: {prefix!r}")
+        # collapse nested scopes so there is exactly one parent level
+        if isinstance(parent, ScopedRegistry):
+            prefix = f"{parent.prefix}.{prefix}"
+            parent = parent.parent
+        self.parent = parent
+        self.prefix = prefix
+
+    def _full(self, name: str) -> str:
+        return f"{self.prefix}.{name}"
+
+    def counter(self, name: str) -> Counter:
+        return self.parent.counter(self._full(name))
+
+    def gauge(self, name: str) -> Gauge:
+        return self.parent.gauge(self._full(name))
+
+    def histogram(self, name: str,
+                  edges: Optional[Sequence[float]] = None) -> Histogram:
+        return self.parent.histogram(self._full(name), edges)
+
+    def group(self, prefix: str, keys: Sequence[str] = ()) -> MetricView:
+        return self.parent.group(self._full(prefix), keys)
+
+    def scoped(self, prefix: str) -> "ScopedRegistry":
+        return ScopedRegistry(self, prefix)
+
+    def snapshot(self) -> Dict[str, object]:
+        """The parent snapshot filtered to this scope (full names kept,
+        so scoped and parent snapshots diff against each other)."""
+        pre = self.prefix + "."
+        return {k: v for k, v in self.parent.snapshot().items()
+                if k.startswith(pre)}
+
+    def export(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump({"metrics": self.snapshot()}, f, indent=1)
+
+    def render(self) -> str:
+        pre = self.prefix + "."
+        lines = self.parent.render().splitlines()
+        return "\n".join(ln for ln in lines if pre in ln)
 
 
 def diff_snapshots(new: Dict[str, object],

@@ -1,8 +1,9 @@
 from repro.serving import engine  # noqa: F401
 from repro.serving.api import (  # noqa: F401
-    FINISH_DEADLINE, FINISH_LENGTH, FINISH_REASONS, FINISH_STOP,
-    RequestHandle, RequestOutput, SamplingParams)
+    FINISH_CANCELLED, FINISH_DEADLINE, FINISH_LENGTH, FINISH_REASONS,
+    FINISH_STOP, RequestHandle, RequestOutput, SamplingParams)
 from repro.serving.engine import Engine, Request, generate_batch  # noqa: F401
+from repro.serving.multi_model import MultiModelEngine  # noqa: F401
 from repro.serving.paged_cache import (  # noqa: F401
     PageAllocator, PagedKVCache, PrefixIndex, TRASH_PAGE)
 from repro.serving.scheduler import Scheduler, SchedulerConfig  # noqa: F401

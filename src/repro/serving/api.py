@@ -36,7 +36,9 @@ Finish reasons:
 - ``"length"``   — ``max_tokens`` generated, or the row hit the
   engine's ``max_len`` context ceiling (``Request.truncated``),
 - ``"deadline"`` — expired in queue before first admission
-  (scheduler ``deadline_s``).
+  (scheduler ``deadline_s``),
+- ``"cancelled"`` — still queued when the engine began a graceful
+  drain (``Engine.cancel_queued``); never admitted, zero tokens.
 """
 from __future__ import annotations
 
@@ -48,6 +50,10 @@ import numpy as np
 FINISH_STOP = "stop"
 FINISH_LENGTH = "length"
 FINISH_DEADLINE = "deadline"
+# cancelled-while-queued (graceful drain); a terminal state like the
+# three above but kept OUT of FINISH_REASONS, which keys the per-reason
+# completion counters for requests that ran
+FINISH_CANCELLED = "cancelled"
 FINISH_REASONS = (FINISH_STOP, FINISH_LENGTH, FINISH_DEADLINE)
 
 
@@ -182,7 +188,8 @@ class RequestHandle:
 
     # ------------------------------------------------------------------
     def _terminal(self) -> bool:
-        return self.req.done or self.req.status in ("expired", "rejected")
+        return self.req.done or self.req.status in (
+            "expired", "rejected", "cancelled")
 
     def _delta(self) -> Optional[RequestOutput]:
         req = self.req

@@ -82,8 +82,9 @@ from repro.models.transformer import Model
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import ENGINE_PID, REQUEST_PID, Tracer
 from repro.serving import sampling as sampling_lib
-from repro.serving.api import (FINISH_DEADLINE, FINISH_LENGTH, FINISH_STOP,
-                               FINISH_REASONS, RequestHandle, SamplingParams)
+from repro.serving.api import (FINISH_CANCELLED, FINISH_DEADLINE,
+                               FINISH_LENGTH, FINISH_STOP, FINISH_REASONS,
+                               RequestHandle, SamplingParams)
 from repro.serving.paged_cache import TRASH_PAGE, PagedKVCache
 from repro.serving.scheduler import Scheduler, SchedulerConfig
 
@@ -106,6 +107,7 @@ class Request:
     max_new_tokens: int = 32            # legacy mirror of sampling.max_tokens
     temperature: float = 0.0            # legacy mirror of sampling.temperature
     priority: int = 0                   # lower = more urgent
+    model: Optional[str] = None         # tenant tag (multi-model engine)
     sampling: Optional[SamplingParams] = None
     # filled by the engine
     tokens: Optional[List[int]] = None
@@ -267,7 +269,12 @@ class Engine:
                  debug_leak_check: bool = False,
                  draft: Optional[Tuple[Model, Any]] = None,
                  spec_k: int = 4,
-                 mesh: Optional[Any] = None):
+                 spec_adaptive: bool = False,
+                 mesh: Optional[Any] = None,
+                 model_tag: Optional[str] = None,
+                 page_allocator: Optional[Any] = None,
+                 shared_pages: Optional[Any] = None,
+                 page_quota: Optional[int] = None):
         """max_concurrency (alias: slots) fixes the decode batch width.
 
         Paged knobs (decoder kinds): ``page_size`` tokens per KV page;
@@ -328,6 +335,17 @@ class Engine:
         single-device math.  Requires the paged backend; speculative
         decoding on a mesh is not supported yet (the draft keeps a
         second, unsharded pool).
+
+        ``spec_adaptive``: accept-rate EWMA controller varies the
+        proposal depth within [1, spec_k] (spec_k becomes k_max);
+        emitted tokens stay bitwise identical (acceptance is equality).
+
+        Multi-tenant hosting (`repro.serving.multi_model`): ``model_tag``
+        names this engine's tenant lane on a shared ``scheduler``
+        (which may be a live `Scheduler` instance, not just a config);
+        ``page_allocator`` / ``shared_pages`` bind it to a shared
+        host-side allocator and device page pool; ``page_quota`` caps
+        its distinct-page footprint on that pool.
         """
         self.model = model
         self.params = params
@@ -355,12 +373,21 @@ class Engine:
         if not self.paged and (prefix_cache or prefill_chunk is not None):
             raise ValueError("prefix_cache/prefill_chunk require the "
                              "paged backend (decoder kinds)")
+        if not self.paged and (page_allocator is not None
+                               or shared_pages is not None
+                               or page_quota is not None):
+            raise ValueError("page_allocator/shared_pages/page_quota "
+                             "require the paged backend (decoder kinds)")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1: {prefill_chunk}")
         self.prefix_cache = prefix_cache
         self.prefill_chunk = prefill_chunk
-        self.sched = Scheduler(scheduler or SchedulerConfig(),
-                               metrics=self.metrics)
+        self.model_tag = model_tag
+        if isinstance(scheduler, Scheduler):
+            self.sched = scheduler       # shared across hosted models
+        else:
+            self.sched = Scheduler(scheduler or SchedulerConfig(),
+                                   metrics=self.metrics)
         self.rows: List[Optional[Request]] = [None] * rows
         self._row_seq = [0] * rows      # admission order, for preemption
         self._seq = 0
@@ -382,7 +409,8 @@ class Engine:
         self._auto_seeds = np.random.default_rng(seed)
         # engine.* counters (registry-backed; stats() is the compat view)
         self._counts = self.metrics.group("engine", keys=(
-            "ticks", "tokens", "done", "failed", "preemptions"))
+            "ticks", "tokens", "done", "failed", "preemptions",
+            "cancelled"))
         self._finish_counts = self.metrics.group("engine.finish",
                                                  keys=FINISH_REASONS)
         self._h_ttft = self.metrics.histogram("engine.ttft_s")
@@ -410,10 +438,16 @@ class Engine:
                 num_pages = rows * maxp + 1          # +1: trash page
             self.kv = PagedKVCache(num_pages, page_size, rows, maxp,
                                    prefix_cache=prefix_cache,
-                                   metrics=self.metrics)
+                                   metrics=self.metrics,
+                                   alloc=page_allocator,
+                                   page_quota=page_quota)
             self._g_pages_used = self.metrics.gauge("kv.pages_in_use")
             self._g_pages_free = self.metrics.gauge("kv.pages_free")
-            self.pages = model.init_paged_cache(num_pages, page_size)
+            self._g_pages_held = self.metrics.gauge("kv.pages_held") \
+                if (page_allocator is not None or page_quota is not None) \
+                else None
+            self.pages = shared_pages if shared_pages is not None \
+                else model.init_paged_cache(num_pages, page_size)
             self._prefill_cache = model.init_cache(1, self.max_len)
             # donate the page pools: without donation the functional
             # pages-in/pages-out contract would copy the whole pool per
@@ -450,7 +484,8 @@ class Engine:
                         "(decoder kind, non-MoE)")
                 from repro.serving.spec_decode import SpecDecoder
                 self.spec = SpecDecoder(self, draft[0], draft[1],
-                                        k=spec_k, attn_impl=attn_impl)
+                                        k=spec_k, attn_impl=attn_impl,
+                                        adaptive=spec_adaptive)
             if mesh is not None:
                 self._init_mesh(mesh)
         else:
@@ -610,6 +645,8 @@ class Engine:
         it) for streamed `RequestOutput` deltas."""
         if req.tokens is None:
             req.tokens = []
+        if self.model_tag is not None:
+            req.model = self.model_tag   # tenant lane on a shared sched
         sp = req.sampling
         if sp.logprobs is not None and sp.logprobs > self._logprob_k:
             raise ValueError(
@@ -700,7 +737,8 @@ class Engine:
             free = self._free_rows()
             if not free:
                 break
-            req = self.sched.pop_admissible(self._can_admit)
+            req = self.sched.pop_admissible(self._can_admit,
+                                            model=self.model_tag)
             if req is None:
                 break
             if not self._begin_prefill(free[0], req, now):
@@ -1176,6 +1214,8 @@ class Engine:
         if self.paged:
             self._g_pages_used.set(self.kv.alloc.num_used)
             self._g_pages_free.set(self.kv.alloc.num_free)
+            if self._g_pages_held is not None:
+                self._g_pages_held.set(self.kv.pages_held())
         if self.tracer.enabled:
             self.tracer.complete(ENGINE_PID, 0, "tick", tick_tr0,
                                  decoded=decoded)
@@ -1183,7 +1223,7 @@ class Engine:
 
     def _step_inner(self) -> int:
         now = _now_mono()
-        for r in self.sched.expire(now):
+        for r in self.sched.expire(now, model=self.model_tag):
             r.status = "expired"       # scheduler set finish_reason
             # stamp the finish clocks like _finish does: a streaming
             # client's terminal "deadline" delta and the latency math
@@ -1288,9 +1328,37 @@ class Engine:
     def pending(self) -> bool:
         """True while the engine has work: queued requests or occupied
         rows.  The public loop condition for callers driving their own
-        ``step()`` loop (streamed serving)."""
-        return bool(len(self.sched) or any(r is not None
-                                           for r in self.rows))
+        ``step()`` loop (streamed serving).  On a shared scheduler only
+        this engine's tenant lane counts."""
+        if self.model_tag is not None:
+            depth = self.sched.depth_by_model().get(self.model_tag, 0)
+        else:
+            depth = len(self.sched)
+        return bool(depth or any(r is not None for r in self.rows))
+
+    def cancel_queued(self) -> List[Request]:
+        """Graceful-drain entry: remove every still-queued request (this
+        engine's tenant lane only, on a shared scheduler) and mark it
+        terminal with ``finish_reason="cancelled"`` — streaming clients
+        see a terminal delta instead of a hung connection.  In-flight
+        rows are untouched; keep ticking until ``pending()`` clears to
+        let them finish."""
+        now = _now_mono()
+        out: List[Request] = []
+        for r in self.sched.drain(model=self.model_tag):
+            r.status = "cancelled"
+            r.finish_reason = FINISH_CANCELLED
+            r.finish_mono = now
+            r.finish_time = _now_wall()
+            self._counts["cancelled"] += 1
+            self._counts["failed"] += 1
+            if self.tracer.enabled:
+                self.tracer.end(REQUEST_PID, r.uid, "queued")
+                self.tracer.end(REQUEST_PID, r.uid, "request",
+                                finish=FINISH_CANCELLED)
+            self._failed.append(r)
+            out.append(r)
+        return out
 
     def run(self, max_ticks: int = 10000) -> List[Request]:
         ticks = 0

@@ -1,0 +1,13 @@
+"""Async HTTP serving front-end (stdlib-asyncio, no third-party deps).
+
+- `frontend` — the server: OpenAI-style ``/v1/completions`` (JSON and
+  streaming SSE), ``/v1/models``, ``/healthz``, ``/metrics``, bridging
+  async connections onto the tick-driven `Engine` / `MultiModelEngine`
+  via `RequestHandle` and one background tick-driver task.
+- `client`   — minimal asyncio HTTP/SSE client helpers used by the
+  tests and the traffic bench (the container has no requests/aiohttp
+  guarantee, so both ends are stdlib-only).
+"""
+from repro.serving.http.frontend import HTTPFrontend, serve
+
+__all__ = ["HTTPFrontend", "serve"]

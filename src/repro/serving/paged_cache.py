@@ -367,11 +367,24 @@ class PagedKVCache:
 
     def __init__(self, num_pages: int, page_size: int, rows: int,
                  max_pages_per_seq: int, prefix_cache: bool = False,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 alloc: Optional[PageAllocator] = None,
+                 page_quota: Optional[int] = None):
         self.page_size = page_size
         self.rows = rows
         self.maxp = max_pages_per_seq
-        self.alloc = PageAllocator(num_pages)
+        # `alloc` lets several caches (one per hosted model) share ONE
+        # physical pool; `page_quota` caps how many distinct pages THIS
+        # cache may hold at once — the per-tenant fairness knob of the
+        # multi-model engine (None = bounded only by the pool).
+        if alloc is not None and alloc.num_pages != num_pages:
+            raise ValueError(f"shared allocator has {alloc.num_pages} "
+                             f"pages, cache expects {num_pages}")
+        self._shared_alloc = alloc is not None
+        self.alloc = alloc if alloc is not None else PageAllocator(num_pages)
+        if page_quota is not None and page_quota < 1:
+            raise ValueError(f"page_quota must be >= 1: {page_quota}")
+        self.page_quota = page_quota
         self.table = np.zeros((rows, max_pages_per_seq), np.int32)
         self.lengths = np.zeros((rows,), np.int32)
         self.row_pages: Dict[int, List[int]] = {}
@@ -395,13 +408,33 @@ class PagedKVCache:
     def pages_for(self, tokens: int) -> int:
         return -(-tokens // self.page_size)
 
+    def pages_held(self) -> int:
+        """Distinct physical pages this cache currently references: row
+        tables, pinned gather tails, and prefix-tree entries.  This is
+        the quantity ``page_quota`` bounds — on a shared allocator it is
+        the cache's true pool footprint (holders across *different*
+        caches never share a page: sharing happens only through a
+        cache-private prefix tree)."""
+        held = set()
+        for pages in self.row_pages.values():
+            held.update(pages)
+        for meta in self.row_meta.values():
+            if meta.tail_page is not None:
+                held.add(meta.tail_page)
+        if self.prefix is not None:
+            held.update(self.prefix.pages())
+        return len(held)
+
     def fits_ever(self, tokens: int) -> bool:
         """Could a request whose feed ever reaches ``tokens`` cached
         positions hold its working set in an otherwise empty pool?
         (Submit-time guard: prevents un-admittable requests from wedging
         the FIFO head forever — with this bound, an admission that keeps
         failing eventually succeeds once the pool drains.)"""
-        return self.pages_for(tokens) <= min(self.usable_pages, self.maxp)
+        cap = min(self.usable_pages, self.maxp)
+        if self.page_quota is not None:
+            cap = min(cap, self.page_quota)
+        return self.pages_for(tokens) <= cap
 
     def can_admit(self, tokens: int, token_ids=None) -> bool:
         """Pages available right now to cache ``tokens`` prefilled
@@ -415,14 +448,37 @@ class PagedKVCache:
         exact, so a ``fits_ever`` request is eventually admitted)."""
         need = self.pages_for(tokens + 1)
         avail = self.alloc.num_free
+        evictable = 0
         if self.prefix is not None:
             if token_ids is not None and tokens > 0:
                 fulls, _ = self.prefix.match(token_ids, peek=True)
                 need -= min(len(fulls), (tokens - 1) // self.page_size)
-            avail += self.prefix.evictable()
+            evictable = self.prefix.evictable()
+            avail += evictable
+        if self.page_quota is not None:
+            # optimistic quota gate mirroring the pool gate: prefix-hit
+            # pages are already in the footprint (the tree holds them),
+            # only the fresh `need` grows it, and quota-driven eviction
+            # can shrink it by at most `evictable`
+            if self.pages_held() - evictable + need > self.page_quota:
+                return False
         return need <= avail
 
     def _alloc_or_evict(self, n: int) -> Optional[List[int]]:
+        """Grant ``n`` fresh pages, evicting this cache's own prefix
+        entries to satisfy pool pressure or the per-cache quota.  The
+        quota gate lives here — the one chokepoint every fresh
+        allocation (admission, decode growth, COW) funnels through —
+        so shared/prefix mappings never charge against it (they do not
+        grow the distinct-page footprint)."""
+        if self.page_quota is not None and n > 0:
+            over = self.pages_held() + n - self.page_quota
+            if over > 0 and self.prefix is not None:
+                # shed tree-only pages first: quota pressure should
+                # reclaim cache, not refuse live work
+                self.prefix.evict(over)
+            if self.pages_held() + n > self.page_quota:
+                return None
         got = self.alloc.alloc(n)
         if got is None and self.prefix is not None:
             self.prefix.evict(n - self.alloc.num_free)
@@ -647,7 +703,17 @@ class PagedKVCache:
         held = {p: self.alloc.refcount(p) for p in refs}
         assert all(c > 0 for c in held.values()), "holder of a free page"
         assert dict(refs) == held, (dict(refs), held)
-        assert len(refs) == self.alloc.num_used, \
-            (len(refs), self.alloc.num_used)
+        if self._shared_alloc:
+            # sibling caches hold the rest of num_used; pages are still
+            # disjoint across caches (per-page equality above proves no
+            # foreign holder on OUR pages)
+            assert len(refs) <= self.alloc.num_used, \
+                (len(refs), self.alloc.num_used)
+        else:
+            assert len(refs) == self.alloc.num_used, \
+                (len(refs), self.alloc.num_used)
         assert self.alloc.num_free + self.alloc.num_used \
             == self.usable_pages
+        if self.page_quota is not None:
+            assert len(refs) <= self.page_quota, \
+                (len(refs), self.page_quota)

@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.obs.metrics import MetricsRegistry
 from repro.serving.api import FINISH_DEADLINE
@@ -63,7 +63,12 @@ class Scheduler:
     def __init__(self, cfg: SchedulerConfig = SchedulerConfig(),
                  metrics: Optional[MetricsRegistry] = None):
         self.cfg = cfg
-        self._classes: Dict[int, deque] = {}
+        # class key is (priority, model): FIFO within a (class, tenant)
+        # lane.  Single-model engines tag every request "" so behavior
+        # is unchanged; the multi-model engine's per-tenant lanes mean a
+        # hot tenant's backlog can never head-of-line-block another
+        # tenant's admission (pop_admissible scans every lane head).
+        self._classes: Dict[Tuple[int, str], deque] = {}
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.counters = self.metrics.group("sched", keys=_COUNTERS)
         self._depth = self.metrics.gauge("sched.queue_depth")
@@ -71,8 +76,16 @@ class Scheduler:
     def __len__(self) -> int:
         return sum(len(q) for q in self._classes.values())
 
-    def _class(self, req) -> int:
-        return req.priority if self.cfg.policy == "priority" else 0
+    def _class(self, req) -> Tuple[int, str]:
+        prio = req.priority if self.cfg.policy == "priority" else 0
+        return (prio, getattr(req, "model", None) or "")
+
+    def _tenant(self, req, event: str, n: int = 1) -> None:
+        """Per-tenant admission accounting (`sched.tenant.<model>.*`) —
+        only for tagged requests, so single-model metrics stay flat."""
+        model = getattr(req, "model", None)
+        if model:
+            self.metrics.counter(f"sched.tenant.{model}.{event}").inc(n)
 
     # ------------------------------------------------------------------
     def submit(self, req, now: float) -> bool:
@@ -83,10 +96,12 @@ class Scheduler:
         clock (NTP-steppable) here would corrupt both."""
         if len(self) >= self.cfg.max_queue:
             self.counters["queue_rejected"] += 1
+            self._tenant(req, "rejected")
             return False
         req.submit_mono = now
         self._classes.setdefault(self._class(req), deque()).append(req)
         self.counters["submitted"] += 1
+        self._tenant(req, "submitted")
         return True
 
     def requeue(self, req) -> None:
@@ -105,7 +120,7 @@ class Scheduler:
         self.counters["unpopped"] += 1
         self._classes.setdefault(self._class(req), deque()).appendleft(req)
 
-    def expire(self, now: float) -> List:
+    def expire(self, now: float, model: Optional[str] = None) -> List:
         """Remove and return queued requests past the queue deadline.
 
         The deadline bounds the wait *before first admission* only: a
@@ -115,11 +130,16 @@ class Scheduler:
         get ``finish_reason = "deadline"`` (the streaming API's
         terminal marker) here, where the expiry decision is made.
         Deadlines compare monotonic marks — a wall-clock step can
-        neither spuriously expire nor immortalize a queued request."""
+        neither spuriously expire nor immortalize a queued request.
+
+        ``model`` filters to one tenant's lanes (None = all) — on a
+        shared scheduler each sub-engine expires only its own queue."""
         if self.cfg.deadline_s is None:
             return []
         dead = []
-        for q in self._classes.values():
+        for key, q in self._classes.items():
+            if model is not None and key[1] != model:
+                continue
             kept = deque()
             for r in q:
                 if getattr(r, "first_admit_mono", None) is None \
@@ -132,21 +152,59 @@ class Scheduler:
             q.clear()
             q.extend(kept)
         self.counters["queue_expired"] += len(dead)
+        for r in dead:
+            self._tenant(r, "expired")
         return dead
 
-    def pop_admissible(self, can_admit: Callable) -> Optional[object]:
+    def pop_admissible(self, can_admit: Callable,
+                       model: Optional[str] = None) -> Optional[object]:
         """Next request to prefill: the head of the most urgent
         non-empty class whose head fits.  Heads only — skipping past a
-        blocked head would break FIFO-within-class."""
-        for prio in sorted(self._classes):
-            q = self._classes[prio]
+        blocked head would break FIFO-within-class.  ``model`` restricts
+        the scan to one tenant's lanes (a sub-engine admits only its
+        own traffic); ties between tenants at equal priority go to the
+        lexicographically smaller tag — deterministic, and per-lane
+        arrival order is what fairness tests pin, not cross-lane order.
+        """
+        for key in sorted(self._classes):
+            if model is not None and key[1] != model:
+                continue
+            q = self._classes[key]
             if q and can_admit(q[0]):
                 self.counters["admitted"] += 1
-                return q.popleft()
+                req = q.popleft()
+                self._tenant(req, "admitted")
+                return req
         return None
 
+    def drain(self, model: Optional[str] = None) -> List:
+        """Remove and return every queued (never-admitted this pass)
+        request — the graceful-shutdown path: the caller marks them
+        cancelled and emits terminal deltas instead of leaving clients
+        hanging.  ``model`` drains one tenant's lanes only."""
+        out: List = []
+        for key, q in self._classes.items():
+            if model is not None and key[1] != model:
+                continue
+            out.extend(q)
+            q.clear()
+        return out
+
     def depth_by_class(self) -> Dict[int, int]:
-        return {p: len(q) for p, q in self._classes.items() if q}
+        """Queue depth per priority class (tenant lanes aggregated —
+        the pre-multi-model reader surface)."""
+        out: Dict[int, int] = {}
+        for (prio, _), q in self._classes.items():
+            if q:
+                out[prio] = out.get(prio, 0) + len(q)
+        return out
+
+    def depth_by_model(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for (_, model), q in self._classes.items():
+            if q:
+                out[model] = out.get(model, 0) + len(q)
+        return out
 
     # ------------------------------------------------------------------
     def account(self, prefill_chunks: int, decoded_rows: int) -> None:

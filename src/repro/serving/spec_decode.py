@@ -65,12 +65,26 @@ _PROP_CATCH = 2       # catch-up slots fused into the propose dispatch
 class SpecDecoder:
     """Per-engine speculative-decode driver (one per Engine)."""
 
+    # adaptive-k controller: EWMA of the per-tick draft accept rate;
+    # raise k when drafts almost always land, back off when they mostly
+    # roll back.  Emitted tokens are unaffected (acceptance is equality
+    # against the base sampler's own draws — k only sets how far ahead
+    # we *try* per tick), so the knob trades dispatch count for
+    # rollback waste with zero output risk.
+    _EWMA_ALPHA = 0.3
+    _K_UP_AT = 0.8        # ewma above this and k < k_max -> k += 1
+    _K_DOWN_AT = 0.4      # ewma below this and k > 1     -> k -= 1
+
     def __init__(self, engine, draft_model, draft_params, k: int = 4, *,
-                 attn_impl: str = "ref"):
+                 attn_impl: str = "ref", adaptive: bool = False):
         if k < 1:
             raise ValueError(f"spec_k must be >= 1: {k}")
         self.eng = engine
+        self.k_max = int(k)
         self.k = int(k)
+        self.adaptive = bool(adaptive)
+        self._accept_ewma: float = 0.0
+        self._ewma_primed = False
         self.draft_model = draft_model
         self.draft_params = draft_params
         rows, maxp = engine.n_rows, engine.kv.maxp
@@ -90,7 +104,10 @@ class SpecDecoder:
             "draft_dispatches", "verify_dispatches", "baseline_rows"))
         self._h_accept = m.histogram(
             "spec.accept_len",
-            edges=tuple(float(i) for i in range(1, self.k + 2)))
+            edges=tuple(float(i) for i in range(1, self.k_max + 2)))
+        self._g_k = m.gauge("spec.k_current")
+        self._g_k.set(self.k)
+        self._g_ewma = m.gauge("spec.accept_ewma")
         self.tracer = engine.tracer
 
         blk = draft_model.decode_paged_block
@@ -111,7 +128,7 @@ class SpecDecoder:
 
         def propose_body(dparams, catch_tokens, lengths, counts,
                          step_mask, pages, table, knobs, pmasks, *,
-                         masks, samp, trunc):
+                         masks, samp, trunc, k):
             """Fused draft tick: catch-up block + k sample/decode steps.
 
             The sampling stages mirror the base sampler exactly — same
@@ -131,13 +148,13 @@ class SpecDecoder:
             cur = lengths + counts
             ridx = jnp.arange(catch_tokens.shape[0])
             props = []
-            for j in range(self.k):
+            for j in range(k):
                 r = sampling_lib.sample_tokens(
                     logits, st, logprob_k=0, with_sampling=samp,
                     with_truncation=trunc)
                 d = r["token"]
                 props.append(d)
-                if j + 1 < self.k:
+                if j + 1 < k:
                     if masks:
                         st["seen"] = st["seen"].at[ridx, d].set(True)
                         st["out_seen"] = st["out_seen"].at[ridx, d] \
@@ -149,12 +166,21 @@ class SpecDecoder:
                     cur = cur + step_mask
             return jnp.stack(props, 1), pages
 
-        self._propose_fns = {
-            (masks, samp, trunc): jax.jit(functools.partial(
-                propose_body, masks=masks, samp=samp, trunc=trunc),
-                donate_argnums=(5,))
-            for masks in (False, True)
-            for samp in (False, True) for trunc in (False, True)}
+        # per-k propose jits, built lazily: fixed-k engines only ever
+        # key (k_max, ...); the adaptive controller adds a key per depth
+        # it actually visits
+        self._propose_body = propose_body
+        self._propose_fns: Dict[tuple, object] = {}
+
+    def _propose_fn(self, k: int, masks: bool, samp: bool, trunc: bool):
+        key = (k, masks, samp, trunc)
+        fn = self._propose_fns.get(key)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                self._propose_body, masks=masks, samp=samp, trunc=trunc,
+                k=k), donate_argnums=(5,))
+            self._propose_fns[key] = fn
+        return fn
 
     # ------------------------------------------------------------------
     def _history(self, i: int, upto: int) -> np.ndarray:
@@ -266,7 +292,7 @@ class SpecDecoder:
             knobs = sst.batch(slice(None), with_masks=False)
             pmasks = {"seen": sst.seen, "out_seen": sst.out_seen} \
                 if masks else {}
-            props, self.pages = self._propose_fns[masks, samp, trunc](
+            props, self.pages = self._propose_fn(k, masks, samp, trunc)(
                 self.draft_params, jnp.asarray(feed),
                 jnp.asarray(self.kv.lengths), jnp.asarray(cnts),
                 jnp.asarray(step_mask), self.pages,
@@ -304,6 +330,7 @@ class SpecDecoder:
         targets = res["token"].reshape(B, S)
         commits = sampling_lib.accept_counts(targets, proposals, limits)
         total = 0
+        tick_accepted = 0
         for i in active:
             req = eng.rows[i]
             done = 0
@@ -327,8 +354,27 @@ class SpecDecoder:
             self._h_accept.observe(done)
             if i in elig:
                 self.counts["accepted_drafts"] += max(done - 1, 0)
+                tick_accepted += max(done - 1, 0)
             self.counts["rollback_tokens"] += max(rolled, 0)
             total += done
+        if self.adaptive and elig:
+            # controller: EWMA the tick's draft accept rate, step k by
+            # one within [1, k_max].  Output-safe by construction —
+            # k only bounds how many equality-verified proposals each
+            # tick attempts, never which tokens commit.
+            rate = tick_accepted / (k * len(elig))
+            if not self._ewma_primed:
+                self._accept_ewma = rate
+                self._ewma_primed = True
+            else:
+                a = self._EWMA_ALPHA
+                self._accept_ewma = a * rate + (1 - a) * self._accept_ewma
+            if self._accept_ewma > self._K_UP_AT and self.k < self.k_max:
+                self.k += 1
+            elif self._accept_ewma < self._K_DOWN_AT and self.k > 1:
+                self.k -= 1
+            self._g_k.set(self.k)
+            self._g_ewma.set(round(self._accept_ewma, 6))
         self.counts["ticks"] += 1
         return total
 
@@ -347,6 +393,9 @@ class SpecDecoder:
         accepted = int(self.counts["accepted_drafts"])
         return {
             "k": self.k,
+            "k_max": self.k_max,
+            "adaptive": self.adaptive,
+            "accept_ewma": round(self._accept_ewma, 6),
             "ticks": int(self.counts["ticks"]),
             "proposed": proposed,
             "accepted_drafts": accepted,

@@ -1,0 +1,276 @@
+"""Multi-model engine: N registry models on one scheduler + one page
+pool must be observationally identical to N dedicated engines.
+
+- fuzz-pinned identity: a two-tenant engine (dense + hashed configs,
+  quota on one tenant, mixed greedy/seeded-sampled rows, bursty
+  submission order) emits bitwise the tokens of two dedicated
+  single-model engines given the same requests,
+- page quotas bound a tenant's distinct-page footprint at every tick
+  while the workload still completes,
+- tenant lanes: a hot tenant's backlog never head-of-line-blocks the
+  other tenant's admission (both make progress inside the burst),
+- per-tenant scheduler counters (``sched.tenant.<model>.*``) balance,
+  cancel_queued stamps the "cancelled" terminal, and queue-deadline
+  expiry on the shared pool leaves both KV caches leak-free,
+- Scheduler model-filter primitives (``drain`` / ``expire`` /
+  ``pop_admissible`` / ``depth_by_model``) respect tenant boundaries.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ArchConfig
+from repro.models import build
+from repro.serving.api import SamplingParams
+from repro.serving.engine import Engine, Request
+from repro.serving.multi_model import MultiModelEngine
+from repro.serving.scheduler import Scheduler, SchedulerConfig
+
+TINY = ArchConfig(
+    name="tiny-mm", family="dense", arch_kind="decoder",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, remat=False, dtype="float32")
+
+PAGE = 8
+MAX_LEN = 64
+FAST_EXAMPLES = int(__import__("os").environ.get("FUZZ_EXAMPLES", "4"))
+
+
+@pytest.fixture(scope="module")
+def packs():
+    """(model, params) per tenant: dense + hashed variants."""
+    out = {}
+    for tag, cfg in (("dense", TINY),
+                     ("hashed", TINY.hashed_variant(0.25))):
+        m = build(cfg)
+        out[tag] = (m, m.init(jax.random.PRNGKey(0)))
+    return out
+
+
+def _mm(packs, *, quota=None, slots=2, deadline=None, prefix=False,
+        max_queue=64):
+    mm = MultiModelEngine(
+        page_size=PAGE,
+        scheduler=SchedulerConfig(max_queue=max_queue,
+                                  deadline_s=deadline))
+    for tag, (m, p) in packs.items():
+        mm.add_model(tag, m, p, slots=slots, max_len=MAX_LEN,
+                     eos_id=-1, seed=0, prefix_cache=prefix,
+                     page_quota=quota if tag == "hashed" else None)
+    return mm
+
+
+def _workload(rng, n):
+    """(model, prompt, SamplingParams) triples, mixed greedy/sampled."""
+    work = []
+    for i in range(n):
+        prompt = rng.integers(2, TINY.vocab_size,
+                              size=int(rng.integers(3, 16))).astype(
+                                  np.int32)
+        if rng.random() < 0.4:
+            sp = SamplingParams(max_tokens=int(rng.integers(2, 7)))
+        else:
+            sp = SamplingParams(temperature=0.8, top_p=0.9,
+                                seed=500 + i,
+                                max_tokens=int(rng.integers(2, 7)))
+        work.append((("dense", "hashed")[int(rng.integers(2))],
+                     prompt, sp))
+    return work
+
+
+# ---------------------------------------------------------------------------
+# identity: shared pool + shared scheduler is bitwise inert
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=FAST_EXAMPLES, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_fuzz_two_tenants_token_identical_to_dedicated(packs, seed):
+    rng = np.random.default_rng(seed)
+    work = _workload(rng, int(rng.integers(4, 10)))
+    quota = int(rng.integers(10, 20))
+
+    mm = _mm(packs, quota=quota)
+    for uid, (tag, prompt, sp) in enumerate(work):
+        assert mm.submit(Request(uid=uid, prompt=prompt.copy(),
+                                 sampling=sp), model=tag)
+    done = mm.run()
+    got = {r.uid: list(r.tokens) for r in done}
+
+    want = {}
+    for tenant in ("dense", "hashed"):
+        m, p = packs[tenant]
+        eng = Engine(m, p, slots=2, max_len=MAX_LEN, eos_id=-1,
+                     page_size=PAGE, seed=0,
+                     scheduler=SchedulerConfig(max_queue=64))
+        for uid, (tag, prompt, sp) in enumerate(work):
+            if tag == tenant:
+                eng.submit(Request(uid=uid, prompt=prompt.copy(),
+                                   sampling=sp))
+        for r in eng.run():
+            want[r.uid] = list(r.tokens)
+    assert got == want
+    for tag in ("dense", "hashed"):
+        mm[tag].kv.leak_check()
+
+
+# ---------------------------------------------------------------------------
+# quotas
+# ---------------------------------------------------------------------------
+
+def test_page_quota_bounds_footprint_every_tick(packs):
+    quota = 8                        # 2 slots x 4 pages max each
+    mm = _mm(packs, quota=quota)
+    rng = np.random.default_rng(1)
+    for uid in range(8):
+        mm.submit(Request(
+            uid=uid,
+            prompt=rng.integers(2, TINY.vocab_size, size=12).astype(
+                np.int32),
+            max_new_tokens=10), model="hashed")
+    ticks = 0
+    while mm.pending() and ticks < 500:
+        mm.step()
+        held = mm["hashed"].kv.pages_held()
+        assert held <= quota, (held, quota)
+        ticks += 1
+    done = mm["hashed"]._done
+    assert sorted(r.uid for r in done) == list(range(8))
+    assert all(len(r.tokens) == 10 for r in done)
+
+
+def test_quota_rejects_never_fitting_request(packs):
+    mm = _mm(packs, quota=2)         # 2 pages can never hold 30 tokens
+    ok = mm.submit(Request(
+        uid=0, prompt=np.arange(2, 26, dtype=np.int32),
+        max_new_tokens=6), model="hashed")
+    assert not ok
+    assert mm.submit(Request(
+        uid=1, prompt=np.arange(2, 26, dtype=np.int32),
+        max_new_tokens=6), model="dense")
+
+
+# ---------------------------------------------------------------------------
+# fairness under a bursty two-tenant arrival
+# ---------------------------------------------------------------------------
+
+def test_bursty_tenants_no_head_of_line_blocking(packs):
+    """A 12-deep dense backlog arriving first must not delay hashed
+    admission: tenant lanes are scanned independently, and each
+    tenant's rows only compete for their own engine's slots."""
+    mm = _mm(packs, slots=2, max_queue=64)
+    rng = np.random.default_rng(2)
+
+    def burst(tag, uids):
+        for uid in uids:
+            mm.submit(Request(
+                uid=uid,
+                prompt=rng.integers(2, TINY.vocab_size, size=8).astype(
+                    np.int32),
+                max_new_tokens=8), model=tag)
+
+    burst("dense", range(12))            # hot tenant first...
+    burst("hashed", range(100, 104))     # ...then the light one
+    mm.step()
+    snap = mm.metrics.snapshot()
+    # the very first tick admits from BOTH lanes despite the dense
+    # backlog being strictly ahead in arrival order
+    assert snap["sched.tenant.dense.admitted"] >= 1
+    assert snap["sched.tenant.hashed.admitted"] >= 1
+    mm.run()
+    snap = mm.metrics.snapshot()
+    for tag, n in (("dense", 12), ("hashed", 4)):
+        assert snap[f"sched.tenant.{tag}.submitted"] == n
+        assert snap[f"sched.tenant.{tag}.admitted"] == n
+        assert snap[f"model.{tag}.engine.done"] == n
+
+
+# ---------------------------------------------------------------------------
+# lifecycle: cancel, deadline expiry, counters
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_stamps_cancelled_terminal(packs):
+    mm = _mm(packs, slots=1, max_queue=64)
+    for uid in range(6):
+        mm.submit(Request(uid=uid,
+                          prompt=np.arange(2, 10, dtype=np.int32),
+                          max_new_tokens=4),
+                  model=("dense", "hashed")[uid % 2])
+    mm.step()                            # admit one row per tenant
+    cancelled = mm.cancel_queued()
+    assert cancelled and all(r.status == "cancelled" and
+                             r.finish_reason == "cancelled"
+                             for r in cancelled)
+    mm.run()                             # in-flight rows finish
+    snap = mm.metrics.snapshot()
+    n_cancelled = sum(snap.get(f"model.{t}.engine.cancelled", 0)
+                      for t in ("dense", "hashed"))
+    assert n_cancelled == len(cancelled)
+    done = [r for t in ("dense", "hashed") for r in mm[t]._done]
+    assert len(done) + len(cancelled) == 6
+    assert all(len(r.tokens) == 4 for r in done)
+
+
+def test_shared_pool_deadline_expiry_leak_free(packs):
+    mm = _mm(packs, slots=1, deadline=0.0)
+    for uid in range(8):
+        mm.submit(Request(uid=uid,
+                          prompt=np.arange(2, 12, dtype=np.int32),
+                          max_new_tokens=6),
+                  model=("dense", "hashed")[uid % 2])
+    mm.run()
+    snap = mm.metrics.snapshot()
+    expired = sum(snap.get(f"sched.tenant.{t}.expired", 0)
+                  for t in ("dense", "hashed"))
+    assert expired > 0
+    for tag in ("dense", "hashed"):
+        mm[tag].kv.leak_check()
+    assert mm._alloc.num_used == 0       # nothing retained, no prefix
+
+
+# ---------------------------------------------------------------------------
+# scheduler tenant primitives
+# ---------------------------------------------------------------------------
+
+def _req(uid, model=None, prio=0):
+    return Request(uid=uid, prompt=np.arange(2, 6, dtype=np.int32),
+                   max_new_tokens=2, priority=prio, model=model)
+
+
+def test_scheduler_model_filters():
+    s = Scheduler(SchedulerConfig(policy="priority", max_queue=64,
+                                  deadline_s=1.0))
+    for uid, (m, p) in enumerate([("a", 0), ("b", 0), ("a", 1),
+                                  (None, 0), ("b", 1)]):
+        assert s.submit(_req(uid, m, p), now=0.0)
+    assert len(s) == 5
+    assert s.depth_by_model() == {"a": 2, "b": 2, "": 1}
+
+    # pop_admissible(model=...) only serves that tenant's lanes,
+    # priority order within the tenant
+    r = s.pop_admissible(lambda _: True, model="a")
+    assert (r.uid, r.model) == (0, "a")
+    r = s.pop_admissible(lambda _: True, model="b")
+    assert (r.uid, r.model) == (1, "b")
+    assert len(s) == 3
+
+    # expire(model=...) touches only that tenant's queued requests
+    dead = s.expire(now=5.0, model="b")
+    assert [d.uid for d in dead] == [4]
+    d = s.depth_by_model()
+    assert (d.get("a"), d.get("b", 0), d.get("")) == (1, 0, 1)
+
+    # drain(model=None) empties everything left
+    rest = s.drain()
+    assert sorted(r.uid for r in rest) == [2, 3]
+    assert len(s) == 0
+
+
+def test_scheduler_drain_single_tenant():
+    s = Scheduler(SchedulerConfig(max_queue=64))
+    for uid, m in enumerate(["a", "b", "a"]):
+        s.submit(_req(uid, m), now=0.0)
+    got = s.drain(model="a")
+    assert sorted(r.uid for r in got) == [0, 2]
+    d = s.depth_by_model()
+    assert (d.get("a", 0), d.get("b")) == (0, 1)

@@ -109,11 +109,11 @@ def _workload(rng):
 
 def _run(m, params, prompts, prios, max_new, *, prefix, chunk, num_pages,
          deadline=None, sampling=None, draft=None, spec_k=3,
-         batched=True):
+         spec_adaptive=False, batched=True):
     eng = Engine(m, params, max_concurrency=3, max_len=MAX_LEN, eos_id=-1,
                  page_size=PAGE, num_pages=num_pages, prefix_cache=prefix,
                  prefill_chunk=chunk, draft=draft, spec_k=spec_k,
-                 batched_prefill=batched,
+                 spec_adaptive=spec_adaptive, batched_prefill=batched,
                  scheduler=SchedulerConfig(policy="priority", max_queue=64,
                                            deadline_s=deadline))
     reqs = [Request(uid=i, prompt=p, max_new_tokens=max_new,
@@ -413,6 +413,40 @@ def test_fuzz_spec_decode_full_sweep(tiny, tiny_drafts, seed):
                                draft=tiny_drafts[rung], spec_k=k)
         assert acc == set(range(len(prompts)))
         assert toks == base, (rung, prefix, chunk, num_pages)
+
+
+@settings(max_examples=FAST_EXAMPLES, deadline=None)
+@given(seed=st.integers(10 ** 6, 2 * 10 ** 6))
+def test_fuzz_spec_adaptive_k_token_identical(tiny, tiny_drafts, seed):
+    """The adaptive proposal-depth controller is a pure scheduling
+    knob: with ``spec_adaptive`` the EWMA walks k inside [1, k_max]
+    between ticks, yet every emitted token must stay bitwise the
+    non-speculative engine's — acceptance is an equality check against
+    the base sampler's own draws at whatever depth was proposed."""
+    m, params = tiny
+    rng = np.random.default_rng(seed)
+    prompts, prios, max_new = _workload(rng)
+    sps = [_sampling_params(rng, max_new) for _ in prompts]
+    num_pages = int(rng.integers(8, 26))
+    chunk = [None, 1, 3, PAGE][int(rng.integers(4))]
+    prefix = bool(rng.integers(2))
+    draft = tiny_drafts[("1/8", "1/16")[int(rng.integers(2))]]
+    k_max = int(rng.integers(2, 5))
+
+    base, acc_b, _, _ = _run(m, params, prompts, prios, max_new,
+                             prefix=prefix, chunk=chunk,
+                             num_pages=num_pages, sampling=sps)
+    spec, acc_s, _, eng = _run(m, params, prompts, prios, max_new,
+                               prefix=prefix, chunk=chunk,
+                               num_pages=num_pages, sampling=sps,
+                               draft=draft, spec_k=k_max,
+                               spec_adaptive=True)
+    assert acc_b == acc_s == set(range(len(prompts)))
+    assert spec == base, (chunk, num_pages, prefix, k_max)
+    st_ = eng.stats()["spec"]
+    assert st_["adaptive"] and st_["k_max"] == k_max
+    assert 1 <= eng.spec.k <= k_max
+    assert 0.0 <= st_["accept_ewma"] <= 1.0
 
 
 def test_fuzz_spec_decode_preemption_mid_prefill(tiny, tiny_drafts):
